@@ -1,0 +1,86 @@
+"""Paper Tables I-III.
+
+Table I  (throughput): the fitted BEANNA cycle model's four numbers vs the
+         paper's, PLUS measured wall-clock of the actual JAX float/hybrid
+         MLPs on this host (CPU XLA; relative speedup is the comparable
+         quantity, labeled as such).
+Table II (memory): exact deployed weight bytes — matches the paper to the
+         byte by construction of the layer accounting.
+Table III(energy): model power x modeled inference time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accelerator_model as am
+from repro.core import hybrid_mlp as H
+
+
+def _time_fn(f, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def measured_inference(batch: int, mode: str = "int8"):
+    """Wall-clock of the real float vs hybrid (deployed/packed) MLP forward
+    on this host. mode picks the binary lowering (int8 is the fast CPU/MXU
+    path; xnor is the paper-faithful packed path)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (batch, 784))
+    out = {}
+    for hybrid in (False, True):
+        params = H.mlp_init(jax.random.PRNGKey(0), hybrid=hybrid)
+        if hybrid:
+            params = H.mlp_pack(params)
+            fwd = jax.jit(lambda p, x: H.mlp_apply_packed(p, x, mode=mode))
+        else:
+            fwd = jax.jit(lambda p, x: H.mlp_apply(p, x, training=False)[0])
+        dt = _time_fn(fwd, params, x)
+        out["hybrid" if hybrid else "float"] = dt
+    return out
+
+
+def run(quick: bool = False):
+    rows = []
+    m = am.fit()
+    t1, t2, t3 = am.table1(m), am.table2(), am.table3(m)
+
+    for k in ("inf_s_float_b1", "inf_s_float_b256", "inf_s_hybrid_b1",
+              "inf_s_hybrid_b256"):
+        rows.append((f"table1/{k}", 1e6 / t1[k],
+                     f"model={t1[k]:.2f}/s paper={am.PAPER[k]}/s "
+                     f"err={100 * (t1[k] / am.PAPER[k] - 1):+.1f}%"))
+    rows.append(("table1/peak_gops_float", 0.0,
+                 f"model={t1['peak_gops_float']} paper=52.8"))
+    rows.append(("table1/peak_gops_binary", 0.0,
+                 f"model={t1['peak_gops_binary']} paper=820"))
+
+    for b in (1, 256):
+        meas = measured_inference(b)
+        sp = meas["float"] / meas["hybrid"]
+        rows.append((f"table1/measured_cpu_b{b}", meas["hybrid"] * 1e6,
+                     f"float={meas['float'] * 1e3:.2f}ms "
+                     f"hybrid={meas['hybrid'] * 1e3:.2f}ms "
+                     f"speedup={sp:.2f}x (CPU XLA; paper FPGA=2.96x)"))
+
+    for k, v in t2.items():
+        paper = am.PAPER[k]
+        rows.append((f"table2/{k}", 0.0,
+                     f"bytes={v} paper={paper} exact={v == paper}"))
+
+    rows.append(("table3/energy_float_b256", 0.0,
+                 f"model={t3['energy_float_b256_mj']:.4f}mJ "
+                 f"paper={am.PAPER['energy_float_mj']}mJ"))
+    rows.append(("table3/energy_hybrid_b256", 0.0,
+                 f"model={t3['energy_hybrid_b256_mj']:.4f}mJ "
+                 f"paper={am.PAPER['energy_hybrid_mj']}mJ"))
+    return rows

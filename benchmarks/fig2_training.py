@@ -1,0 +1,57 @@
+"""Paper Fig. 2 protocol: train the float and hybrid networks, report the
+test-accuracy gap (paper: 98.19% vs 97.96%, gap 0.23 pp, on real MNIST;
+here on the synthetic offline MNIST — the *gap* is the reproduced claim)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hybrid_mlp as H
+from repro.data.synthetic import SyntheticMnist
+
+
+def train_one(hybrid: bool, *, epochs: int, data: SyntheticMnist,
+              lr: float = 0.05, batch: int = 128, seed: int = 0):
+    params = H.mlp_init(jax.random.PRNGKey(seed), hybrid=hybrid)
+
+    @jax.jit
+    def step(params, x, y):
+        (loss, (new, _)), grads = jax.value_and_grad(
+            H.mlp_loss, has_aux=True)(params, (x, y))
+        upd = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        upd = jax.tree_util.tree_map_with_path(
+            lambda path, p: jnp.clip(p, -1, 1)
+            if any(str(getattr(k, "key", k)) == "w_latent" for k in path)
+            else p, upd)
+        for k in new:
+            if k.startswith("bn"):
+                upd[k]["mean"] = new[k]["mean"]
+                upd[k]["var"] = new[k]["var"]
+        return upd, loss
+
+    accs = []
+    for epoch in range(epochs):
+        for x, y in data.batches("train", batch, seed=epoch):
+            params, loss = step(params, jnp.asarray(x), jnp.asarray(y))
+        xt, yt = data.test
+        accs.append(float(H.mlp_accuracy(params, jnp.asarray(xt),
+                                         jnp.asarray(yt))))
+    return accs
+
+
+def run(quick: bool = True):
+    epochs = 3 if quick else 20
+    data = SyntheticMnist(n_train=4096 if quick else 8192, n_test=1024)
+    acc_f = train_one(False, epochs=epochs, data=data)
+    acc_h = train_one(True, epochs=epochs, data=data)
+    gap = (acc_f[-1] - acc_h[-1]) * 100
+    return [
+        ("fig2/float_final_acc", 0.0,
+         f"acc={acc_f[-1] * 100:.2f}% curve={['%.3f' % a for a in acc_f]}"),
+        ("fig2/hybrid_final_acc", 0.0,
+         f"acc={acc_h[-1] * 100:.2f}% curve={['%.3f' % a for a in acc_h]}"),
+        ("fig2/accuracy_gap", 0.0,
+         f"gap={gap:+.2f}pp (paper: +0.23pp on real MNIST)"),
+    ]

@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: the three lowerings of the binary dense op on
+this host's XLA CPU backend (relative numbers; TPU numbers are roofline-
+derived in EXPERIMENTS.md). Also reports the achieved weight-compression
+ratios, which are host-independent."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binarize import pack_bits, pack_signs_int8
+from repro.kernels import ops, ref as kref
+
+
+def _time_fn(f, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = True):
+    m, k, n = (512, 1024, 1024) if quick else (2048, 4096, 4096)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, k))
+    pa, pw = pack_bits(a), pack_bits(w)
+    ai8, wi8 = pack_signs_int8(a), pack_signs_int8(w)
+    abf, wbf = (jnp.sign(a).astype(jnp.bfloat16),
+                jnp.sign(w).astype(jnp.bfloat16))
+
+    xnor = jax.jit(lambda pa, pw: kref.binary_matmul_packed_ref(pa, pw, k))
+    int8 = jax.jit(kref.int8_matmul_ref)
+    bf16 = jax.jit(lambda a, w: kref.bf16_matmul_ref(a, w.T))
+
+    rows = []
+    t_x = _time_fn(xnor, pa, pw)
+    t_i = _time_fn(int8, ai8, wi8)
+    t_b = _time_fn(bf16, abf, wbf)
+    gops = 2 * m * k * n / 1e9
+    rows.append(("kernel/xnor_packed_cpu", t_x * 1e6,
+                 f"{gops / t_x:.1f} GOps/s  weights={pw.nbytes}B"))
+    rows.append(("kernel/int8_cpu", t_i * 1e6,
+                 f"{gops / t_i:.1f} GOps/s  weights={wi8.nbytes}B"))
+    rows.append(("kernel/bf16_cpu", t_b * 1e6,
+                 f"{gops / t_b:.1f} GOps/s  weights={wbf.nbytes}B"))
+    rows.append(("kernel/weight_compression", 0.0,
+                 f"bf16/packed={wbf.nbytes / pw.nbytes:.1f}x "
+                 f"(paper: 16x for binary layers)"))
+
+    # pallas kernels in interpret mode: correctness-checked here, not timed
+    from repro.kernels.binary_matmul import binary_matmul_pallas
+    got = binary_matmul_pallas(pa[:128], pw[:128], k=k, interpret=True)
+    want = kref.binary_matmul_packed_ref(pa[:128], pw[:128], k)
+    ok = bool(np.array_equal(np.asarray(got), np.asarray(want)))
+    rows.append(("kernel/pallas_interpret_check", 0.0, f"allclose={ok}"))
+    return rows

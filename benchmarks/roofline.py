@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run artifacts (artifacts/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/analytic ratio, and per-device memory residency.
+Also emits the markdown table consumed by EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_markdown(recs, mesh: str = "pod16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_coll | bottleneck | "
+        "useful/analytic | arg GiB/dev | temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute']:.3e} | "
+            f"{rl['t_memory']:.3e} | {rl['t_collective']:.3e} | "
+            f"{rl['bottleneck']} | "
+            f"{ratio:.2f} | "
+            f"{mem['argument_bytes'] / 2**30:.2f} | "
+            f"{mem['temp_bytes'] / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    rows = []
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    er = [r for r in recs if r["status"] == "error"]
+    rows.append(("roofline/cells", 0.0,
+                 f"ok={len(ok)} skipped={len(sk)} error={len(er)}"))
+    for r in ok:
+        rl = r["roofline"]
+        step = rl.get("step_time_est", 0.0)
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     step * 1e6,
+                     f"bottleneck={rl['bottleneck']} "
+                     f"t=({rl['t_compute']:.2e},{rl['t_memory']:.2e},"
+                     f"{rl['t_collective']:.2e})s "
+                     f"useful={r.get('useful_flops_ratio', 0) or 0:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(fmt_markdown(recs, "pod16x16"))
+    print()
+    print(fmt_markdown(recs, "pod2x16x16"))

@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="long versions (more epochs, bigger shapes)")
+    ap.add_argument("--only", default="",
+                    help="comma list: tables,fig2,kernels,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import beanna_tables, fig2_training, kernel_bench, \
+        roofline
+
+    suites = [
+        ("tables", beanna_tables.run),
+        ("kernels", kernel_bench.run),
+        ("fig2", fig2_training.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        try:
+            for row in fn(quick=quick):
+                n, us, derived = row
+                print(f"{n},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stdout)
+    sys.stdout.flush()
+
+
+if __name__ == '__main__':
+    main()

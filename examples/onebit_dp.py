@@ -1,0 +1,88 @@
+"""1-bit gradient compression with error feedback — the paper's binary idea
+applied to the data-parallel interconnect (DESIGN.md section 3, item 4).
+
+Trains the same tiny LM twice under an explicit shard_map DP step: once
+with full-precision gradient psum, once with sign-compressed (1-bit wire
+format) psum + error feedback, and shows the loss curves track each other
+while the synchronized gradient bytes drop ~16x vs bf16.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/onebit_dp.py
+"""
+
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import smoke_config
+from repro.data.synthetic import SyntheticTokens
+from repro.models import get_model
+from repro.train.manual_dp import (init_error_feedback,
+                                   make_onebit_dp_step)
+
+
+def main():
+    cfg = smoke_config("stablelm-3b").replace(remat="none")
+    api = get_model(cfg)
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def loss_fn(params, batch):
+        return api.loss(params, batch)
+
+    def sgd(params, grads, opt):
+        return jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - 0.01 * g).astype(p.dtype),
+            params, grads), opt
+
+    # --- full-precision DP baseline (plain psum inside shard_map) ---
+    def fp_step(params, opt, err, batch):
+        def per_device(params, opt, err, local):
+            (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, local)
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g.astype(jnp.float32), "data"),
+                grads)
+            params, opt = sgd(params, grads, opt)
+            return params, opt, err, m
+        return jax.shard_map(per_device, mesh=mesh,
+                             in_specs=(P(), P(), P(), P("data")),
+                             out_specs=(P(), P(), P(), P()),
+                             check_vma=False)(params, opt, err, batch)
+
+    onebit_step = make_onebit_dp_step(loss_fn, sgd, mesh)
+
+    data = SyntheticTokens(cfg.vocab, 32, 8, seed=0, noise=0.02)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        api.init(jax.random.PRNGKey(0))))
+    print(f"params={n_params / 1e6:.2f}M; per-step DP sync: "
+          f"bf16={2 * n_params / 2**20:.1f} MiB vs "
+          f"1-bit packed={n_params / 8 / 2**20:.2f} MiB (16x)")
+
+    for name, step in (("fp32-psum", fp_step), ("1bit+EF", onebit_step)):
+        params = api.init(jax.random.PRNGKey(0))
+        err = init_error_feedback(params)
+        opt = {}
+        data_it = SyntheticTokens(cfg.vocab, 32, 8, seed=0, noise=0.02)
+        losses = []
+        with jax.set_mesh(mesh):
+            for i in range(40):
+                b = next(data_it)
+                b = {k: jnp.asarray(v) for k, v in b.items()}
+                params, opt, err, m = jax.jit(step)(params, opt, err, b)
+                losses.append(float(m["loss"]))
+        print(f"{name:10s} loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(first 3: {['%.3f' % l for l in losses[:3]]})")
+
+
+if __name__ == "__main__":
+    main()

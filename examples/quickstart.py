@@ -1,0 +1,58 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+Builds a hybrid (binary-hidden-layer) network, trains it briefly on the
+synthetic MNIST set, packs it for deployment (16x smaller binary layers),
+and runs packed inference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hybrid_mlp as H
+from repro.data.synthetic import SyntheticMnist
+
+
+def main():
+    data = SyntheticMnist(n_train=2048, n_test=512)
+    params = H.mlp_init(jax.random.PRNGKey(0), hybrid=True)
+
+    @jax.jit
+    def step(params, x, y):
+        (loss, (new, _)), g = jax.value_and_grad(
+            H.mlp_loss, has_aux=True)(params, (x, y))
+        params = jax.tree.map(lambda p, g: p - 0.05 * g, params, g)
+        # BNN rule: clip latent weights to [-1, 1] (paper eq. 2)
+        params = jax.tree_util.tree_map_with_path(
+            lambda path, p: jnp.clip(p, -1, 1)
+            if any(str(getattr(k, "key", k)) == "w_latent" for k in path)
+            else p, params)
+        for k in new:
+            if k.startswith("bn"):
+                params[k]["mean"] = new[k]["mean"]
+                params[k]["var"] = new[k]["var"]
+        return params, loss
+
+    for epoch in range(2):
+        for x, y in data.batches("train", 128, seed=epoch):
+            params, loss = step(params, jnp.asarray(x), jnp.asarray(y))
+        xt, yt = data.test
+        acc = H.mlp_accuracy(params, jnp.asarray(xt), jnp.asarray(yt))
+        print(f"epoch {epoch}: loss={float(loss):.3f} "
+              f"test_acc={float(acc) * 100:.1f}%")
+
+    # deploy: drop latents, pack hidden layers to 1 bit per weight
+    packed = H.mlp_pack(params)
+    logits = H.mlp_apply_packed(packed, jnp.asarray(data.test[0][:8]))
+    print("packed inference logits shape:", logits.shape)
+    print(f"deployed weight bytes: hybrid={H.weight_memory_bytes(hybrid=True):,}"
+          f" vs float={H.weight_memory_bytes(hybrid=False):,} "
+          f"({H.weight_memory_bytes(hybrid=False) / H.weight_memory_bytes(hybrid=True):.2f}x smaller)")
+
+
+if __name__ == "__main__":
+    main()

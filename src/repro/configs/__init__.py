@@ -1,0 +1,58 @@
+"""Config registry: ``get_config(name)`` / ``smoke_config(name)``.
+
+Every assigned architecture is a module exposing CONFIG (full published
+hyperparameters) and smoke() (reduced same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    PrecisionPolicy,
+    ShapeSpec,
+    SHAPES,
+    cell_is_runnable,
+)
+
+ARCHS = [
+    "minicpm3-4b",
+    "qwen3-8b",
+    "qwen2-72b",
+    "stablelm-3b",
+    "whisper-base",
+    "llama-3.2-vision-11b",
+    "deepseek-v2-236b",
+    "deepseek-v3-671b",
+    "zamba2-2.7b",
+    "rwkv6-3b",
+]
+
+_MOD = {
+    "minicpm3-4b": "minicpm3_4b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen2-72b": "qwen2_72b",
+    "stablelm-3b": "stablelm_3b",
+    "whisper-base": "whisper_base",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "beanna-mnist": "beanna_mnist",
+}
+
+
+def _module(name: str):
+    if name not in _MOD:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MOD)}")
+    return importlib.import_module(f"repro.configs.{_MOD[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()

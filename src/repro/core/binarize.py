@@ -1,0 +1,114 @@
+"""Binarization primitives: sign with straight-through estimator, bit packing.
+
+This is the numerical heart of BEANNA: weights/activations constrained to
+{-1, +1}, stored 1 bit each (bit=1 <-> +1), inner products computed as
+
+    dot(a, w) = K - 2 * popcount(xor(pack(a), pack(w)))
+
+Training follows Courbariaux et al.: forward uses sign(latent), backward uses
+the straight-through estimator  d sign(x)/dx ~= 1_{|x| <= 1}, and latent
+weights are clipped to [-1, 1] after each optimizer step (optim/bnn.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LANE_BITS = 32  # bits packed per uint32 lane
+
+
+# ---------------------------------------------------------------------------
+# sign with straight-through estimator
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def sign_ste(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1, +1} (sign(0) := +1), gradient 1_{|x|<=1} (STE)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_ste_fwd(x):
+    return sign_ste(x), x
+
+
+def _sign_ste_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_ste_fwd, _sign_ste_bwd)
+
+
+def hardtanh(x: jax.Array) -> jax.Array:
+    """Paper eq. (3)."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# bit packing along the last axis
+# ---------------------------------------------------------------------------
+
+def packed_len(k: int) -> int:
+    return (k + LANE_BITS - 1) // LANE_BITS
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """Pack sign bits of ``x`` (..., K) -> (..., ceil(K/32)) uint32.
+
+    bit i of lane j == 1  <=>  x[..., 32*j + i] >= 0   (i.e. value +1).
+    Padding bits (when K % 32 != 0) are set to 1 (+1); consumers must
+    correct for them (see ``binary_matmul`` refs / kernels).
+    """
+    k = x.shape[-1]
+    kp = packed_len(k)
+    pad = kp * LANE_BITS - k
+    bits = (x >= 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.ones((*x.shape[:-1], pad), jnp.uint32)], axis=-1
+        )
+    bits = bits.reshape(*x.shape[:-1], kp, LANE_BITS)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(p: jax.Array, k: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of pack_bits: (..., Kp) uint32 -> (..., k) in {-1, +1}."""
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*p.shape[:-1], p.shape[-1] * LANE_BITS)[..., :k]
+    return (bits.astype(dtype) * 2 - 1).astype(dtype)
+
+
+def pack_signs_int8(x: jax.Array) -> jax.Array:
+    """sign(x) as int8 in {-1, +1} (the MXU-friendly representation)."""
+    return jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# reference binary inner products (oracles; kernels/ref.py re-exports)
+# ---------------------------------------------------------------------------
+
+def binary_dot_packed(pa: jax.Array, pw: jax.Array, k: int) -> jax.Array:
+    """dot of +-1 vectors from packed bits.
+
+    pa: (..., M, Kp) uint32, pw: (N, Kp) uint32 -> (..., M, N) int32.
+    Correct for any K (padding bits are +1 in both operands and contribute
+    +1 each to the XNOR count, i.e. 0 to xor-popcount, so:
+    dot = K_padded - 2*popcount(xor) - n_pad  ==  K - 2*popcount(xor)).
+    """
+    x = jnp.bitwise_xor(pa[..., :, None, :], pw[None, :, :])
+    pc = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    return jnp.int32(k) - 2 * pc
+
+
+def binary_matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    """Float oracle: sign(a) @ sign(w).T, exact small-int result as f32.
+
+    a: (M, K), w: (N, K) -> (M, N).
+    """
+    sa = jnp.where(a >= 0, 1.0, -1.0).astype(jnp.float32)
+    sw = jnp.where(w >= 0, 1.0, -1.0).astype(jnp.float32)
+    return sa @ sw.T

@@ -1,0 +1,84 @@
+"""BinaryDense: the paper's binary layer as a composable module.
+
+Training keeps a float *latent* weight (clipped to [-1,1] by optim/bnn.py);
+forward binarizes it via the kernels/ops dispatch. At deploy time
+``pack_for_inference`` drops the latents for 1-bit packed weights — the 16x
+memory cut of Table II.
+
+A learnable per-output scale (init 1/sqrt(K)) maps the integer dot output
+back to unit-variance activations; the paper's MLP instead relies on its
+BatchNorm for this (core/hybrid_mlp.py passes scale=False to stay exact).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import pack_bits, packed_len
+from repro.kernels import ops
+
+
+def binary_dense_init(key, in_dim: int, out_dim: int, *, scale: bool = True,
+                      dtype=jnp.float32):
+    w = jax.random.uniform(key, (in_dim, out_dim), jnp.float32, -1.0, 1.0)
+    p = {"w_latent": w.astype(dtype)}
+    if scale:
+        p["scale"] = jnp.full((out_dim,), 1.0 / math.sqrt(in_dim),
+                              jnp.float32)
+    return p
+
+
+def binary_dense_apply(p, x, *, mode: str = "xnor", impl: str = "auto"):
+    """Latent-weight path (training and eval-with-latents)."""
+    y = ops.binary_dense(x, p["w_latent"], mode=mode, impl=impl)
+    if "scale" in p:
+        y = y * p["scale"][None, :]
+    return y.astype(x.dtype)
+
+
+def pack_for_inference(p):
+    """Latent params -> deploy params (packed bits, 16x smaller than bf16).
+    The true contraction dim K is static config, not a param leaf — pass it
+    to binary_dense_apply_packed (or rely on x.shape[-1])."""
+    q = {"w_packed": pack_bits(p["w_latent"].T)}
+    if "scale" in p:
+        q["scale"] = p["scale"]
+    return q
+
+
+def binary_dense_apply_packed(q, x, *, k: int | None = None,
+                              mode: str = "xnor", impl: str = "auto"):
+    k = k if k is not None else x.shape[-1]
+    y = ops.binary_dense_packed(x, q["w_packed"], k, mode=mode, impl=impl)
+    if "scale" in q:
+        y = y * q["scale"][None, :]
+    return y.astype(x.dtype)
+
+
+def binary_dense_apply_any(p, x, *, mode: str = "xnor",
+                           impl: str = "auto"):
+    """Dispatch on representation: latent (training) / packed u32 (deployed
+    xnor) / int8 (deployed MXU path)."""
+    if "w_latent" in p:
+        return binary_dense_apply(p, x, mode=mode, impl=impl)
+    if "w_packed" in p:
+        return binary_dense_apply_packed(p, x, mode="xnor", impl=impl)
+    if "w_int8" in p:
+        lead = x.shape[:-1]
+        x2d = x.reshape(-1, x.shape[-1])
+        from repro.core.binarize import pack_signs_int8
+        from repro.kernels import ref as kref
+        y = kref.int8_matmul_ref(pack_signs_int8(x2d),
+                                 p["w_int8"]).astype(jnp.float32)
+        if "scale" in p:
+            y = y * p["scale"][None, :]
+        return y.reshape(*lead, -1).astype(x.dtype)
+    raise KeyError(f"no binary weight in {list(p)}")
+
+
+def binary_dense_bytes(in_dim: int, out_dim: int) -> int:
+    """Deployed weight bytes (packed)."""
+    return packed_len(in_dim) * 4 * out_dim

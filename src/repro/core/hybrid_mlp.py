@@ -1,0 +1,115 @@
+"""The paper's exact network: fully-connected 784-1024-1024-1024-10 on
+MNIST, hardtanh + BatchNorm after each hidden layer (paper section 3A).
+
+Two variants share this code:
+  * float  — all four weight matrices bf16 ("Floating Point Only" column)
+  * hybrid — the two 1024x1024 hidden matrices binarized (BEANNA column)
+
+Memory accounting reproduces the paper's Table II to the byte:
+  float : 2,910,208 params x 2 B             = 5,820,416 B
+  hybrid: (784*1024 + 1024*10) x 2 B
+          + 2 x 1024*1024 / 8 B              = 1,888,256 B
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import hardtanh, packed_len
+from repro.core.binary_dense import (binary_dense_apply, binary_dense_init,
+                                     binary_dense_bytes)
+from repro.nn import layers as nn
+
+DIMS = (784, 1024, 1024, 1024, 10)
+BINARY_LAYERS = (1, 2)  # the two 1024x1024 hidden matrices
+
+
+def mlp_init(key, *, hybrid: bool, dims=DIMS):
+    ks = jax.random.split(key, len(dims) - 1)
+    params = {}
+    for i in range(len(dims) - 1):
+        name = f"fc{i}"
+        if hybrid and i in BINARY_LAYERS:
+            params[name] = {"bin": binary_dense_init(
+                ks[i], dims[i], dims[i + 1], scale=False)}
+        else:
+            params[name] = nn.dense_init(ks[i], dims[i], dims[i + 1],
+                                         bias=True, dtype=jnp.float32)
+        if i < len(dims) - 2:  # BN on hidden layers
+            params[f"bn{i}"] = nn.batchnorm_init(dims[i + 1])
+    return params
+
+
+def mlp_apply(params, x, *, training: bool, mode: str = "xnor"):
+    """x (B, 784) in [-1, 1]. Returns (logits, new_params_with_bn_stats)."""
+    new = dict(params)
+    n_layers = len(DIMS) - 1
+    h = x.astype(jnp.float32)
+    for i in range(n_layers):
+        p = params[f"fc{i}"]
+        if "bin" in p:
+            h = binary_dense_apply(p["bin"], h, mode=mode)
+        else:
+            h = nn.dense_apply(p, h, compute_dtype=jnp.float32)
+        if i < n_layers - 1:
+            h, new_bn = nn.batchnorm_apply(params[f"bn{i}"], h,
+                                           training=training)
+            new[f"bn{i}"] = new_bn
+            h = hardtanh(h)
+    return h, new
+
+
+def mlp_pack(params):
+    """Deploy-time packing: drop latents for 1-bit packed weights."""
+    from repro.core.binary_dense import pack_for_inference
+    out = {}
+    for k, v in params.items():
+        if isinstance(v, dict) and "bin" in v:
+            out[k] = {"bin_packed": pack_for_inference(v["bin"])}
+        else:
+            out[k] = v
+    return out
+
+
+def mlp_apply_packed(params, x, *, mode: str = "xnor"):
+    """Inference with packed weights (weights never unpacked to float)."""
+    from repro.core.binary_dense import binary_dense_apply_packed
+    n_layers = len(DIMS) - 1
+    h = x.astype(jnp.float32)
+    for i in range(n_layers):
+        p = params[f"fc{i}"]
+        if "bin_packed" in p:
+            h = binary_dense_apply_packed(p["bin_packed"], h, mode=mode)
+        else:
+            h = nn.dense_apply(p, h, compute_dtype=jnp.float32)
+        if i < n_layers - 1:
+            h, _ = nn.batchnorm_apply(params[f"bn{i}"], h, training=False)
+            h = hardtanh(h)
+    return h
+
+
+def mlp_loss(params, batch, *, training: bool = True, mode: str = "xnor"):
+    x, y = batch
+    logits, new = mlp_apply(params, x, training=training, mode=mode)
+    logits = logits.astype(jnp.float32)
+    ll = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(ll, y[:, None], axis=1).mean()
+    return loss, (new, logits)
+
+
+def mlp_accuracy(params, x, y, *, mode: str = "xnor"):
+    logits, _ = mlp_apply(params, x, training=False, mode=mode)
+    return (jnp.argmax(logits, -1) == y).mean()
+
+
+def weight_memory_bytes(*, hybrid: bool, dims=DIMS) -> int:
+    """Deployed off-chip weight memory (paper Table II accounting: weights
+    only, bf16 = 2 B or packed 1-bit)."""
+    total = 0
+    for i in range(len(dims) - 1):
+        if hybrid and i in BINARY_LAYERS:
+            total += binary_dense_bytes(dims[i], dims[i + 1])
+        else:
+            total += dims[i] * dims[i + 1] * 2
+    return total

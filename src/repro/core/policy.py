@@ -1,0 +1,23 @@
+"""PrecisionPolicy lives in configs/base.py (it is config); this module holds
+the *application* helpers that models use to decide per-layer lowering —
+BEANNA's per-layer mode signal, resolved at trace time."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PrecisionPolicy  # noqa: F401
+
+
+def binary_block_mask(cfg: ModelConfig) -> list[bool]:
+    """Per-block binary flag (paper rule: edge blocks stay float)."""
+    return [cfg.policy.block_is_binary(i, cfg.n_layers)
+            for i in range(cfg.n_layers)]
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)

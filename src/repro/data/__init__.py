@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticTokens,
+    SyntheticMnist,
+    make_lm_batch_specs,
+)

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    MeshRules,
+    DEFAULT_MESH_RULES,
+    logical_to_spec,
+    partition_specs,
+    with_logical_constraint,
+)

@@ -1,0 +1,318 @@
+"""Roofline terms from a compiled SPMD module.
+
+``cost_analysis()`` gives per-partition HLO FLOPs and bytes; collective
+traffic is NOT in cost_analysis, so we parse the post-partitioning HLO text
+and sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (counting the async ``-start`` form once).
+
+v5e hardware constants (per chip) used for the three roofline terms.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# --- TPU v5e per-chip constants ---
+PEAK_BF16 = 197e12          # FLOP/s
+PEAK_INT8 = 394e12          # OP/s
+HBM_BW = 819e9              # B/s
+ICI_BW = 50e9               # B/s per link
+ICI_LINKS = 4               # usable links/chip on a 2D torus (2 axes x 2 dirs)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# computation headers look like  "%name (p: (s32[], f32[64])) -> (...) {"
+# — param lists NEST parens, so match loosely up to the arrow
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{",
+                       re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_WHILE_RE2 = re.compile(
+    r"while\(.*?\)[^\n]*?body=%?([\w\.\-]+)[^\n]*?condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\)[^\n]*?"
+                      r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(txt: str) -> dict[str, str]:
+    """computation name -> body text (brace-balanced blocks)."""
+    comps = {}
+    for m in _COMP_HDR.finditer(txt):
+        name = m.group(1)
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(txt) and depth:
+            c = txt[i]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+            i += 1
+        comps[name] = txt[start:i]
+    return comps
+
+
+def _line_coll_bytes(body: str) -> int:
+    total = 0
+    for line in body.splitlines():
+        for op in _COLL_OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                rhs = lhs[1]
+                type_str = rhs[:rhs.find(op)]
+                b = _array_bytes(type_str)
+                if f"{op}-start(" in line:
+                    b //= 2
+                if op == "all-reduce":
+                    b *= 2
+                total += b
+                break
+    return total
+
+
+def collective_bytes_while_aware(hlo_text: str, entry: str | None = None
+                                 ) -> int:
+    """Total collective bytes with while-loop bodies multiplied by their
+    trip counts (parsed from the max constant in the loop condition —
+    exact for lax.scan lowerings, which compare the induction variable
+    against a compile-time constant)."""
+    comps = _split_computations(hlo_text)
+    if not comps:
+        return _line_coll_bytes(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        cond = comps.get(cond_name, "")
+        consts = [int(c) for c in _CONST_RE.findall(cond)]
+        return max(consts) if consts else 1
+
+    memo: dict[str, int] = {}
+
+    def total_of(name: str, depth=0) -> int:
+        if name in memo or depth > 16:
+            return memo.get(name, 0)
+        body = comps.get(name, "")
+        t = _line_coll_bytes(body)
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            t += trip_count(cond) * total_of(wbody, depth + 1)
+        for m in _WHILE_RE2.finditer(body):
+            wbody, cond = m.group(1), m.group(2)
+            t += trip_count(cond) * total_of(wbody, depth + 1)
+        for m in _CALL_RE.finditer(body):
+            t += total_of(m.group(1), depth + 1)
+        memo[name] = t
+        return t
+
+    if entry is None:
+        # the entry computation: named in "ENTRY %name" header
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo_text)
+        entry = m.group(1) if m else next(iter(comps))
+    return total_of(entry)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective type (one partition's view).
+
+    all-reduce is scaled x2 (ring reduce-scatter + all-gather phases move
+    2(p-1)/p ~= 2 bytes per byte of payload)."""
+    out = {op: {"bytes": 0, "count": 0} for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            # match "op(" / "op-start(" but not "-done(" (avoid dup counts)
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                rhs = lhs[1]
+                opidx = rhs.find(op)
+                type_str = rhs[:opidx]
+                b = _array_bytes(type_str)
+                # async-start tuples repeat operand+result; halve
+                if f"{op}-start(" in line:
+                    b //= 2
+                if op == "all-reduce":
+                    b *= 2
+                out[op]["bytes"] += b
+                out[op]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    t_compute: float = field(init=False)
+    t_memory: float = field(init=False)
+    t_collective: float = field(init=False)
+    bottleneck: str = field(init=False)
+
+    def __post_init__(self):
+        self.t_compute = self.flops / PEAK_BF16
+        self.t_memory = self.hbm_bytes / HBM_BW
+        self.t_collective = self.coll_bytes / (ICI_LINKS * ICI_BW)
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze_compiled(compiled, *, cfg=None, shape=None,
+                     n_chips: int = 256) -> dict:
+    """Extract cost/memory/collective stats from a compiled executable.
+
+    Raw cost_analysis numbers are recorded as-is (body-once caveat); the
+    roofline terms use the while-aware collective bytes + the analytic
+    FLOP/byte model when cfg/shape are given (see analytic_cost.py).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    coll_total = collective_bytes_while_aware(txt)
+    coll["total_bytes_while_aware"] = coll_total
+    mem = compiled.memory_analysis()
+
+    out = {
+        "cost": {"flops_hlo_body_once": flops,
+                 "bytes_hlo_body_once": bytes_accessed},
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+    if cfg is not None and shape is not None:
+        from repro.distributed import analytic_cost as AC
+        sc = AC.step_cost(cfg, shape)
+        t_comp = sc.t_compute(n_chips)
+        t_mem = sc.hbm_bytes / n_chips / HBM_BW
+        t_coll = coll_total / (ICI_LINKS * ICI_BW)
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        out["analytic"] = {
+            "flops_bf16": sc.flops_bf16, "flops_int8": sc.flops_int8,
+            "flops_xnor": sc.flops_xnor, "hbm_bytes": sc.hbm_bytes,
+        }
+        out["roofline"] = {
+            "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+            "bottleneck": max(terms, key=terms.get),
+            "step_time_est": max(terms.values()),
+        }
+    else:
+        rl = Roofline(flops, bytes_accessed, coll_total)
+        out["roofline"] = rl.as_dict()
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for the step's
+    token count D; decode steps process one token per sequence."""
+    n = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch          # decode: one token per sequence
+    return 2.0 * n * d
+
+
+def param_count(cfg, *, active_only: bool = False) -> float:
+    """Analytic parameter count (embeddings + blocks + head)."""
+    d, v, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    per_block = 0.0
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.use_mla:
+            h, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                             cfg.v_head_dim)
+            c, qc = cfg.kv_lora_rank, cfg.q_lora_rank
+            attn = (d * qc + qc * h * (dn + dr)) if qc else \
+                d * h * (dn + dr)
+            attn += d * (c + dr) + c * h * dn + c * h * dv + h * dv * d
+        else:
+            dh = cfg.head_dim or d // cfg.n_heads
+            attn = d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        per_block = attn
+    if cfg.family == "moe":
+        dense_ffn = 3 * d * cfg.d_ff
+        routed_all = cfg.n_experts * 3 * d * cfg.moe_d_ff
+        routed_act = cfg.top_k * 3 * d * cfg.moe_d_ff
+        shared = cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        n_moe = L - cfg.first_dense_layers
+        total = (emb + L * per_block + cfg.first_dense_layers * dense_ffn
+                 + n_moe * ((routed_act if active_only else routed_all)
+                            + shared))
+        return total
+    if cfg.family in ("dense", "vlm"):
+        ffn = 3 * d * cfg.d_ff
+        total = emb + L * (per_block + ffn)
+        if cfg.family == "vlm":
+            n_cross = L // cfg.cross_every
+            dh = cfg.head_dim or d // cfg.n_heads
+            cross = d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2) \
+                + 3 * d * cfg.d_ff
+            total += n_cross * cross
+        return total
+    if cfg.family == "whisper":
+        dh = cfg.head_dim or d // cfg.n_heads
+        attn = 4 * d * d
+        ffn = 2 * d * cfg.d_ff
+        enc = cfg.enc_layers * (attn + ffn)
+        dec = L * (2 * attn + ffn)
+        return emb + enc + dec
+    if cfg.family == "mamba2_hybrid":
+        di = cfg.expand * d
+        mamba = d * 2 * di + d * (2 * cfg.d_state + di // 64) + di * d
+        dh = cfg.head_dim or d // cfg.n_heads
+        shared = 4 * d * d + 3 * d * cfg.d_ff
+        return emb + L * mamba + shared
+    if cfg.family == "rwkv6":
+        tm = 5 * d * d + 2 * d * 64
+        cm = 2 * d * cfg.d_ff + d * d
+        return emb + L * (tm + cm)
+    raise ValueError(cfg.family)

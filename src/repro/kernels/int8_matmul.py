@@ -1,0 +1,65 @@
+"""+-1-as-int8 MXU matmul with on-the-fly unpack from bit-packed weights.
+
+The TPU-native *compute-bound* realization of BEANNA's binary mode: weights
+live in HBM bit-packed (16x smaller than bf16); each grid step unpacks a
+(bn, bkp) uint32 tile to (bn, bk) int8 inside VMEM and feeds the MXU at its
+394 TOP/s int8 rate (2x bf16 peak). Activations arrive as +-1 int8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.binarize import LANE_BITS
+
+
+def _unpack_pm1(w_packed):
+    """(bn, bkp) uint32 -> (bn, bkp*32) int8 in {-1, +1}."""
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (w_packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(w_packed.shape[0], -1)
+    return (bits.astype(jnp.int8) * 2 - 1).astype(jnp.int8)
+
+
+def _kernel(a_ref, pw_ref, out_ref, *, nk: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = _unpack_pm1(pw_ref[...])              # (bn, bk) int8
+    a = a_ref[...]                            # (bm, bk) int8
+    out_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul_pallas(a: jax.Array, pw: jax.Array, *, bm: int = 256,
+                       bn: int = 256, bk: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """a (M, K) int8, pw (N, K/32) uint32 -> (M, N) int32."""
+    m, k = a.shape
+    n, kp = pw.shape
+    assert kp * LANE_BITS == k, (k, kp)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert bk % LANE_BITS == 0
+    bkp = bk // LANE_BITS
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bn, bkp), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a, pw)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness ground truth (tests assert_allclose kernels
+against them) and also the lowering used for dry-run roofline analysis,
+where GSPMD must see native XLA ops it can shard.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import LANE_BITS
+
+
+def binary_matmul_packed_ref(pa: jax.Array, pw: jax.Array, k: int) -> jax.Array:
+    """XNOR-popcount matmul on packed operands.
+
+    pa (M, Kp) uint32, pw (N, Kp) uint32 -> (M, N) int32 = K - 2*popcount(xor)
+    (padding bits equal in both operands cancel; see core/binarize.py).
+    """
+    x = jnp.bitwise_xor(pa[:, None, :], pw[None, :, :])
+    pc = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    return jnp.int32(k) - 2 * pc
+
+
+def int8_matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    """a (M, K) int8 x w (N, K) int8 -> (M, N) int32 (the +-1 MXU path)."""
+    return jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def bf16_matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    """a (M, K) bf16 x w (K, N) bf16 -> (M, N) f32."""
+    return jnp.dot(a.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+
+
+def hybrid_dense_ref(pa: jax.Array, pw: jax.Array, scale: jax.Array,
+                     shift: jax.Array, k: int) -> jax.Array:
+    """Fused binary dense + affine + hardtanh + sign + re-pack.
+
+    pa (M, Kp) uint32, pw (N, Kp) uint32, scale/shift (N,) f32
+    -> (M, N // 32) uint32 packed sign bits of hardtanh(scale*dot + shift).
+
+    (sign(hardtanh(y)) == sign(y); hardtanh matters for the STE backward,
+    the forward bit is just the sign. We keep the affine in f32.)
+    """
+    dot = binary_matmul_packed_ref(pa, pw, k).astype(jnp.float32)
+    y = dot * scale[None, :] + shift[None, :]
+    bits = (y >= 0).astype(jnp.uint32)
+    m, n = bits.shape
+    assert n % LANE_BITS == 0
+    bits = bits.reshape(m, n // LANE_BITS, LANE_BITS)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)

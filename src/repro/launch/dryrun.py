@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs, record memory/cost analysis + collective bytes.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --sweep [--multi-pod-only]
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json (sweep skips cells
+whose artifact already exists — the sweep is resumable).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, cell_is_runnable
+from repro.distributed import hlo_analysis
+from repro.distributed.sharding import set_logical_rules
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.train.step import make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               cfg_override=None):
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    api = get_model(cfg)
+    serving = shape.kind != "train"
+    if serving and cfg.serve_mesh and not multi_pod:
+        from repro.launch.mesh import make_mesh
+        dims = [int(x) for x in cfg.serve_mesh.split("x")]
+        mesh = make_mesh(dims, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    if serving and not cfg.serve_fsdp:
+        cfg = cfg.replace(fsdp=False)
+    mesh_rules = S.mesh_rules_for(cfg, mesh, shape)
+    set_logical_rules(mesh, mesh_rules)
+    # serving cells carry DEPLOYED weights (binary latents dropped for
+    # packed/int8) — the paper's Table II memory cut, visible in the
+    # compiled artifact's argument bytes
+    deployed = (shape.kind != "train" and cfg.policy.binary_ffn
+                and cfg.policy.binary_mode != "bf16")
+    p_abs, p_sh = S.param_shardings(api, mesh, mesh_rules,
+                                    deployed=deployed)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            o_abs, o_sh = S.opt_shardings(api, cfg, p_abs, p_sh, mesh)
+            b_abs, b_sh = S.batch_specs_and_shardings(cfg, shape, mesh,
+                                                      mesh_rules)
+            step = make_train_step(api, cfg)
+            f = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                        out_shardings=(p_sh, o_sh, None),
+                        donate_argnums=(0, 1))
+            lowered = f.lower(p_abs, o_abs, b_abs)
+        elif shape.kind == "prefill":
+            b_abs, b_sh = S.batch_specs_and_shardings(cfg, shape, mesh,
+                                                      mesh_rules)
+            f = jax.jit(lambda p, b: api.prefill(p, b),
+                        in_shardings=(p_sh, b_sh))
+            lowered = f.lower(p_abs, b_abs)
+        else:  # decode
+            c_abs, c_sh = S.cache_specs_and_shardings(api, cfg, shape, mesh,
+                                                      mesh_rules)
+            t_abs, t_sh = S.decode_token_specs(cfg, shape, mesh, mesh_rules)
+            if cfg.serve_cache_sharding == "auto":
+                # let GSPMD choose cache shardings end-to-end: the decode
+                # loop reaches a steady state in whatever sharding the
+                # attention prefers (e.g. kv-head sharded), avoiding the
+                # forced re-shard all-gather per step (EXPERIMENTS.md §Perf)
+                c_sh = None
+            f = jax.jit(lambda p, c, t: api.decode(p, c, t),
+                        in_shardings=(p_sh, c_sh, t_sh),
+                        out_shardings=(None, c_sh),
+                        donate_argnums=(1,))
+            lowered = f.lower(p_abs, c_abs, t_abs)
+    return lowered, mesh, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = ART_DIR, cfg_override=None, tag: str = ""):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell + ".json")
+
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    runnable, reason = cell_is_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "tag": tag}
+    if not runnable:
+        rec.update({"status": "skipped", "reason": reason})
+        json.dump(rec, open(out_path, "w"), indent=1)
+        print(f"[dryrun] SKIP {cell}: {reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        lowered, mesh, cfg, shape = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, cfg_override=cfg_override)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        n_chips = 512 if multi_pod else 256
+        stats = hlo_analysis.analyze_compiled(compiled, cfg=cfg,
+                                              shape=shape, n_chips=n_chips)
+        mflops = hlo_analysis.model_flops(cfg, shape)
+        a = stats.get("analytic", {})
+        total_analytic = (a.get("flops_bf16", 0) + a.get("flops_int8", 0)
+                          + a.get("flops_xnor", 0))
+        rec.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "model_flops_step": mflops,
+            "useful_flops_ratio": (mflops / total_analytic
+                                   if total_analytic else None),
+            "param_count": hlo_analysis.param_count(cfg),
+            "param_count_active": hlo_analysis.param_count(
+                cfg, active_only=True),
+            **stats,
+        })
+        rl = stats["roofline"]
+        print(f"[dryrun] OK   {cell}  lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s "
+              f"t_comp={rl['t_compute']:.2e} t_mem={rl['t_memory']:.2e} "
+              f"t_coll={rl['t_collective']:.2e} "
+              f"bottleneck={rl['bottleneck']}")
+    except Exception as e:  # noqa: BLE001
+        rec.update({"status": "error", "error": repr(e),
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] FAIL {cell}: {e!r}")
+    json.dump(rec, open(out_path, "w"), indent=1)
+    return rec
+
+
+def sweep(*, multi_pod_values=(False, True), out_dir: str = ART_DIR,
+          only_arch=None, skip_existing=True):
+    cells = []
+    for arch in ARCHS:
+        if only_arch and arch != only_arch:
+            continue
+        cfg = get_config(arch)
+        # smallest-first within arch: decode < prefill < train lowering cost
+        for shape_name in ("decode_32k", "long_500k", "prefill_32k",
+                           "train_4k"):
+            for mp in multi_pod_values:
+                cells.append((arch, shape_name, mp))
+    results = []
+    for arch, shape_name, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        out_path = os.path.join(out_dir,
+                                f"{arch}__{shape_name}__{mesh_name}.json")
+        if skip_existing and os.path.exists(out_path):
+            rec = json.load(open(out_path))
+            if rec.get("status") in ("ok", "skipped"):
+                print(f"[dryrun] CACHED {arch}__{shape_name}__{mesh_name}"
+                      f" ({rec['status']})")
+                results.append(rec)
+                continue
+        results.append(run_cell(arch, shape_name, multi_pod=mp,
+                                out_dir=out_dir))
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    er = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] sweep done: {ok} ok, {sk} skipped, {er} errors")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out-dir", default=ART_DIR)
+    ap.add_argument("--no-skip-existing", action="store_true")
+    args = ap.parse_args()
+    if args.sweep:
+        mp = (False, True)
+        if args.single_pod_only:
+            mp = (False,)
+        if args.multi_pod_only:
+            mp = (True,)
+        sweep(multi_pod_values=mp, out_dir=args.out_dir,
+              only_arch=args.arch,
+              skip_existing=not args.no_skip_existing)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --sweep"
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 out_dir=args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

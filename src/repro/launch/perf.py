@@ -1,0 +1,145 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver (EXPERIMENTS.md section Perf).
+
+Runs the three chosen (arch x shape) pairs through dry-run variants — each
+variant is one hypothesis -> change -> re-lower -> re-analyse iteration —
+and prints the roofline terms side by side.
+
+  PYTHONPATH=src python -m repro.launch.perf --pair qwen3_train
+  PYTHONPATH=src python -m repro.launch.perf --all
+"""
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell, ART_DIR
+
+PERF_DIR = os.path.join(ART_DIR, "..", "perf")
+
+
+def _variants_qwen3_train():
+    cfg = get_config("qwen3-8b")
+    return "qwen3-8b", "train_4k", [
+        ("base", cfg),
+        # H1: baseline t_coll = 19.7 s (!) — GSPMD "involuntary full
+        # rematerialization" warnings point at the 8-kv-head projections
+        # sharded 16-way (8 heads % 16 != 0: the flat 1024-wide K/V dim
+        # shards mid-head and the per-head attention math bounces f32
+        # activations). Replicating wk/wv (weights are tiny) should
+        # collapse the pathological gathers.
+        ("kv_replicated", cfg.replace(shard_kv_heads=False)),
+        # H2: remat=block replays the layer fwd INSIDE bwd, re-running its
+        # all-reduces; dots policy saves matmul outputs -> no collective
+        # replay + ~22% fewer recompute flops.
+        ("remat_dots", cfg.replace(shard_kv_heads=False, remat="dots")),
+        # H3: single-chunk attention at 4k -> fewer K/V re-reads (memory)
+        ("attnchunk4k", cfg.replace(shard_kv_heads=False, remat="dots",
+                                    attn_chunk=4096)),
+        # H4: binary FFN in xnor mode during training (ablation: compute
+        # moves from int8 MXU to VPU -- predicted regression)
+        ("xnor_train", cfg.replace(shard_kv_heads=False, remat="dots",
+                                   policy=cfg.policy.__class__(
+                                       binary_ffn=True, edge_blocks_float=2,
+                                       binary_mode="xnor"))),
+    ]
+
+
+def _variants_whisper_decode():
+    cfg = get_config("whisper-base")
+    return "whisper-base", "decode_32k", [
+        ("base", cfg),
+        # H1 (REFUTED): mask-update instead of dynamic_update_slice — the
+        # 7.2 GB of all-gather was NOT the cache write.
+        ("mask_update", cfg.replace(cache_update="mask")),
+        # H2 (inspector finding): the gathers re-shard the caches from the
+        # forced batch-only in/out sharding back from the head-sharded form
+        # attention prefers. Let GSPMD pick cache shardings end-to-end:
+        # the decode loop reaches a head-sharded steady state, no gathers.
+        ("auto_cache", cfg.replace(serve_cache_sharding="auto")),
+        # H3: recarve the 256-chip pod as (data=32, model=8) for serving so
+        # TP degree == kv heads; caches shard evenly by head.
+        ("mesh32x8", cfg.replace(serve_mesh="32x8")),
+        # H4: + binary xnor weights (memory-bound after the fix)
+        ("mesh32x8_xnor", cfg.replace(serve_mesh="32x8",
+                                      policy=cfg.policy.__class__(
+                                          binary_ffn=True,
+                                          edge_blocks_float=1,
+                                          binary_mode="xnor"))),
+    ]
+
+
+def _variants_dsv3_decode():
+    cfg = get_config("deepseek-v3-671b")
+    return "deepseek-v3-671b", "decode_32k", [
+        ("base", cfg),
+        # H1 (REFUTED): the compressed-MLA cache write was not the cost
+        ("mask_update", cfg.replace(cache_update="mask")),
+        # H2 (inspector finding): 2.1 GB/step of the 5.8 GB is FSDP weight
+        # all-gathers (x55 MoE layers). Binary packing makes the deployed
+        # model fit per-chip without ZeRO -> drop FSDP at serve time.
+        ("no_fsdp", cfg.replace(serve_fsdp=False)),
+        # H3: + xnor deployed weights (16x binary weight bytes vs int8's
+        # 1 B/weight) -> memory term halves
+        ("no_fsdp_xnor", cfg.replace(serve_fsdp=False,
+                                     policy=cfg.policy.__class__(
+                                         binary_ffn=True,
+                                         edge_blocks_float=3,
+                                         binary_mode="xnor"))),
+        # H4: wider float edge region (quality guard) — memory cost?
+        ("xnor_edge8", cfg.replace(serve_fsdp=False,
+                                   policy=cfg.policy.__class__(
+                                       binary_ffn=True, edge_blocks_float=8,
+                                       binary_mode="xnor"))),
+    ]
+
+
+PAIRS = {
+    "qwen3_train": _variants_qwen3_train,
+    "whisper_decode": _variants_whisper_decode,
+    "dsv3_decode": _variants_dsv3_decode,
+}
+
+
+def run_pair(name: str, multi_pod: bool = False):
+    arch, shape, variants = PAIRS[name]()
+    rows = []
+    for tag, cfg in variants:
+        rec = run_cell(arch, shape, multi_pod=multi_pod,
+                       out_dir=PERF_DIR, cfg_override=cfg,
+                       tag=f"__{name}__{tag}")
+        if rec["status"] == "ok":
+            rl = rec["roofline"]
+            rows.append((tag, rl["t_compute"], rl["t_memory"],
+                         rl["t_collective"], rl["bottleneck"],
+                         rec["memory"]["argument_bytes"] / 2**30))
+        else:
+            rows.append((tag, None, None, None, rec["status"], 0))
+    print(f"\n=== {name} ({arch} x {shape}) ===")
+    print(f"{'variant':16s} {'t_comp':>10s} {'t_mem':>10s} {'t_coll':>10s} "
+          f"{'bottleneck':>12s} {'args GiB/dev':>12s}")
+    for tag, tc, tm, tl, bn, ab in rows:
+        if tc is None:
+            print(f"{tag:16s} {'—':>10s} {'—':>10s} {'—':>10s} {bn:>12s}")
+        else:
+            print(f"{tag:16s} {tc:10.3e} {tm:10.3e} {tl:10.3e} {bn:>12s} "
+                  f"{ab:12.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    names = list(PAIRS) if args.all else [args.pair]
+    for n in names:
+        run_pair(n, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

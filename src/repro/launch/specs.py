@@ -1,0 +1,151 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, plus the
+sharding trees for params / optimizer / batches / caches.
+
+No device allocation happens here — everything is abstract (eval_shape) so
+the 671B configs cost nothing to describe.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data.synthetic import make_lm_batch_specs
+from repro.distributed.sharding import (MeshRules, partition_specs)
+from repro.models import get_model
+from repro.optim import adamw_init
+
+# cache-leaf sharding rules (same machinery as params)
+CACHE_RULES = [
+    (r"(^|/)(k|v|ek|ev)$", ("batch", "cache_seq", "cache_heads", "kv")),
+    (r"(^|/)c$", ("batch", "cache_seq", "kv_lora")),
+    (r"(^|/)kr$", ("batch", "cache_seq", "kv_lora")),
+    (r"(^|/)len$", ("batch",)),
+    (r"(^|/)h$", ("batch", "heads", "kv", "state")),      # mamba SSM state
+    (r"(^|/)conv$", ("batch", "seq", "dconv")),
+    (r"tm_s$", ("batch", "heads", "kv", "state")),
+    (r"(tm_x|cm_x)$", ("batch", "seq", "embed")),
+    (r"cross$", ("batch", "seq", "embed")),               # vlm patch embeds
+]
+
+BATCH_RULES = [
+    (r"(tokens|labels)$", ("batch", "seq")),
+    (r"frames$", ("batch", "seq", "embed")),
+    (r"patches$", ("batch", "seq", "embed")),
+]
+
+
+def mesh_rules_for(cfg: ModelConfig, mesh, shape: ShapeSpec | None = None
+                   ) -> MeshRules:
+    """Adapt the default logical->mesh table to this arch + cell.
+
+    jit input shardings demand exact divisibility, so anything uneven falls
+    back to the widest divisible sharding (a documented production choice —
+    e.g. 40-head archs replicate attention over the model axis)."""
+    rules = MeshRules(fsdp=cfg.fsdp)
+    over = {}
+    model_n = mesh.shape.get("model", 1)
+    dh = cfg.kv_head_dim()
+    if cfg.n_heads % model_n or (cfg.n_heads * dh) % model_n:
+        over["heads"] = None
+    if (cfg.n_kv_heads * dh) % model_n or not cfg.shard_kv_heads:
+        over["kv_heads"] = None
+    if cfg.n_kv_heads % model_n:
+        over["cache_heads"] = None
+    if cfg.serve_shard_cache_seq:
+        # sequence-parallel decode attention: shard the cache's time axis
+        # over "model" (and free that axis from the head dim). GSPMD turns
+        # the softmax into partial-reduction + small cross-shard combines.
+        over["cache_seq"] = "model"
+        over["cache_heads"] = None
+    if cfg.family == "mamba2_hybrid":
+        di = cfg.expand * cfg.d_model
+        if (di // 64) % model_n:      # mamba heads
+            over["heads"] = None
+    # batch divisibility: drop axes until the global batch divides
+    if shape is not None:
+        axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+        while axes:
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if shape.global_batch % n == 0:
+                break
+            axes.pop(0)
+        over["batch"] = tuple(axes) if axes else None
+    if over:
+        rules.rules = dict(rules.rules, **over)
+    return rules
+
+
+def abstract_params(api, *, deployed: bool = False):
+    if deployed:
+        return jax.eval_shape(
+            lambda: api.init_deployed(jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+
+
+def param_shardings(api, mesh, mesh_rules, *, deployed: bool = False):
+    p_abs = abstract_params(api, deployed=deployed)
+    rules = api.deployed_rules if deployed else api.param_rules
+    specs = partition_specs(p_abs, rules, mesh, mesh_rules)
+    return p_abs, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_shardings(api, cfg, p_abs, p_sh, mesh):
+    mdt = jnp.dtype(cfg.opt_moment_dtype)
+    o_abs = jax.eval_shape(partial(adamw_init, moment_dtype=mdt), p_abs)
+    o_sh = {
+        "m": jax.tree.map(lambda s: s, p_sh),
+        "v": jax.tree.map(lambda s: s, p_sh),
+        "step": NamedSharding(mesh, P()),
+    }
+    return o_abs, o_sh
+
+
+def batch_specs_and_shardings(cfg, shape: ShapeSpec, mesh, mesh_rules):
+    specs = make_lm_batch_specs(cfg, shape)
+    sh_specs = partition_specs(specs, BATCH_RULES, mesh, mesh_rules)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sh_specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    return specs, sh
+
+
+def cache_specs_and_shardings(api, cfg, shape: ShapeSpec, mesh, mesh_rules):
+    b, s = shape.global_batch, shape.seq_len
+    cache_abs = jax.eval_shape(partial(api.init_cache, b, s))
+    sh_specs = partition_specs(cache_abs, CACHE_RULES, mesh, mesh_rules)
+    sh = jax.tree.map(lambda x: NamedSharding(mesh, x), sh_specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    return cache_abs, sh
+
+
+def decode_token_specs(cfg, shape, mesh, mesh_rules):
+    b = shape.global_batch
+    spec = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    from repro.distributed.sharding import logical_to_spec
+    sh = NamedSharding(mesh, logical_to_spec(("batch", "seq"), mesh,
+                                             mesh_rules))
+    return spec, sh
+
+
+def input_specs(arch_or_cfg, shape: ShapeSpec, *, kind=None):
+    """ShapeDtypeStructs for every input of the step this cell lowers
+    (the assignment's input_specs() entry point)."""
+    from repro.configs import get_config
+    cfg = (arch_or_cfg if isinstance(arch_or_cfg, ModelConfig)
+           else get_config(arch_or_cfg))
+    api = get_model(cfg)
+    kind = kind or shape.kind
+    if kind in ("train", "prefill"):
+        return make_lm_batch_specs(cfg, shape)
+    b = shape.global_batch
+    cache_abs = jax.eval_shape(partial(api.init_cache, b, shape.seq_len))
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "caches": cache_abs}

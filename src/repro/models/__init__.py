@@ -1,0 +1,99 @@
+"""Unified model API: every architecture exposes the same five functions.
+
+    api = get_model(cfg)
+    params = api.init(key)
+    loss, metrics = api.loss(params, batch)          # batch: tokens/labels(+frames/patches)
+    logits, caches = api.prefill(params, batch)      # full-sequence -> decode caches
+    caches = api.init_cache(batch_size, max_len)     # empty caches for pure decode
+    logits, caches = api.decode(params, caches, tokens)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.configs.base import ModelConfig
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    param_rules: list
+
+    def init_deployed(self, key):
+        """Deploy-time params: binary latents -> packed/int8 weights."""
+        from repro.models.deploy import deploy_params
+        return deploy_params(self.init(key), self.cfg)
+
+    @property
+    def deployed_rules(self):
+        from repro.models.deploy import DEPLOYED_RULES
+        return DEPLOYED_RULES + self.param_rules
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe"):
+        from repro.models import transformer as t
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: t.lm_init(key, cfg),
+            loss=lambda p, b: t.lm_loss(p, cfg, b),
+            prefill=lambda p, b, **kw: t.lm_prefill(p, cfg, b["tokens"],
+                                                    **kw),
+            decode=lambda p, c, tok: t.lm_decode(p, cfg, c, tok),
+            init_cache=lambda bs, ml: t.lm_init_cache(cfg, bs, ml),
+            param_rules=t.PARAM_RULES,
+        )
+    if cfg.family == "vlm":
+        from repro.models import llama_vision as v
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: v.vlm_init(key, cfg),
+            loss=lambda p, b: v.vlm_loss(p, cfg, b),
+            prefill=lambda p, b, **kw: v.vlm_prefill(p, cfg, b["tokens"],
+                                                     b["patches"], **kw),
+            decode=lambda p, c, tok: v.vlm_decode(p, cfg, c, tok),
+            init_cache=lambda bs, ml: v.vlm_init_cache(cfg, bs, ml),
+            param_rules=v.PARAM_RULES,
+        )
+    if cfg.family == "whisper":
+        from repro.models import whisper as w
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: w.whisper_init(key, cfg),
+            loss=lambda p, b: w.whisper_loss(p, cfg, b),
+            prefill=lambda p, b, **kw: w.whisper_prefill(p, cfg, b["tokens"],
+                                                         b["frames"], **kw),
+            decode=lambda p, c, tok: w.whisper_decode(p, cfg, c, tok),
+            init_cache=lambda bs, ml: w.whisper_init_cache(cfg, bs, ml),
+            param_rules=w.PARAM_RULES,
+        )
+    if cfg.family == "mamba2_hybrid":
+        from repro.models import zamba2 as z
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: z.zamba_init(key, cfg),
+            loss=lambda p, b: z.zamba_loss(p, cfg, b),
+            prefill=lambda p, b, **kw: z.zamba_prefill(p, cfg, b["tokens"],
+                                                       **kw),
+            decode=lambda p, c, tok: z.zamba_decode(p, cfg, c, tok),
+            init_cache=lambda bs, ml: z.zamba_init_cache(cfg, bs, ml),
+            param_rules=z.PARAM_RULES,
+        )
+    if cfg.family == "rwkv6":
+        from repro.models import rwkv6_lm as r
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: r.rwkv_init(key, cfg),
+            loss=lambda p, b: r.rwkv_loss(p, cfg, b),
+            prefill=lambda p, b, **kw: r.rwkv_prefill(p, cfg, b["tokens"],
+                                                      **kw),
+            decode=lambda p, c, tok: r.rwkv_decode(p, cfg, c, tok),
+            init_cache=lambda bs, ml: r.rwkv_init_cache(cfg, bs, ml),
+            param_rules=r.PARAM_RULES,
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

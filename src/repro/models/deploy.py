@@ -1,0 +1,80 @@
+"""Deploy-time parameter transform: drop binary latents for quantized
+weights (paper Table II generalized to the LLM zoo).
+
+Representation per lowering mode:
+  xnor -> uint32 bit-packed, 16x smaller than bf16 (XNOR+popcount path)
+  int8 -> +-1 int8, 2x smaller than bf16 (MXU path; the Pallas kernel keeps
+          HBM packed and unpacks in VMEM — XLA stores int8, noted in
+          DESIGN.md)
+
+The transform walks the param tree structurally: any dict with a
+"w_latent" leaf becomes a quantized dict; MoE expert stacks (3-D latents
+next to "s_mid") are quantized batched. apply-side dispatch is by key
+("w_packed" / "w_int8" / expert "*_q"), so the same model code serves both
+training and deployed params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.binarize import pack_bits, pack_signs_int8
+
+
+def _quantize_dense(p: dict, mode: str) -> dict:
+    # w_latent is (K, N) or scan-stacked (L, K, N): swap ONLY the last two
+    # dims so packing always runs along K
+    w = jnp.swapaxes(p["w_latent"], -1, -2)
+    if mode == "xnor":
+        q = {"w_packed": pack_bits(w)}            # (..., N, K/32) u32
+    else:
+        q = {"w_int8": pack_signs_int8(w)}        # (..., N, K) i8
+    if "scale" in p:
+        q["scale"] = p["scale"]
+    return q
+
+
+def _quantize_expert_stack(w3, mode: str):
+    """(E, K, N) (or stacked (L, E, K, N)) latents ->
+    packed (..., E, N, K/32) u32 or (..., E, K, N) i8."""
+    if mode == "xnor":
+        return pack_bits(jnp.swapaxes(w3, -1, -2))
+    return pack_signs_int8(w3)
+
+
+def deploy_params(params, cfg: ModelConfig):
+    """Training params -> deployed params (latents dropped)."""
+    mode = cfg.policy.binary_mode
+    if mode == "bf16" or not cfg.policy.binary_ffn:
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w_latent" in node:
+                return _quantize_dense(node, mode)
+            if "s_mid" in node:  # binary MoE expert stack
+                out = dict(node)
+                for k in ("w_gate", "w_up", "w_down"):
+                    out[k + "_q"] = _quantize_expert_stack(node[k], mode)
+                    del out[k]
+                return {k: walk(v) if k not in
+                        ("w_gate_q", "w_up_q", "w_down_q", "s_mid", "s_out")
+                        else v for k, v in out.items()}
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+# deployed-param sharding rules (appended to each family's PARAM_RULES);
+# packed dims shard like their latent counterparts (packed dim = K/32)
+DEPLOYED_RULES = [
+    (r"ffn/bin_in/(w_packed|w_int8)$", ("mlp", "embed")),
+    (r"ffn/bin_out/(w_packed|w_int8)$", ("embed", "mlp")),
+    (r"(in_zx|c_k)/bin/(w_packed|w_int8)$", ("mlp", "embed")),
+    (r"(out|c_v)/bin/(w_packed|w_int8)$", ("embed", "mlp")),
+    (r"ffn/w_(gate|up)_q$", ("expert", None, "embed")),
+    (r"ffn/w_down_q$", ("expert", "embed", None)),
+]

@@ -1,0 +1,198 @@
+"""Llama-3.2-Vision-style VLM backbone: a GQA decoder with gated cross-
+attention blocks inserted after every `cross_every` self-attention blocks.
+The vision encoder is a STUB per the assignment: input_specs provide
+precomputed patch embeddings (B, n_patches, d_model).
+
+Cross-attn blocks are input-adjacent (they consume the image) and stay
+float under the paper's edge-layer rule; self blocks binarize their FFNs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm_common as lc
+from repro.models.transformer import PARAM_RULES as _BASE_RULES
+from repro.nn import attention as attn_lib
+from repro.nn import layers as nn
+
+PARAM_RULES = [
+    (r"xattn/wq/w$", ("embed", "heads")),
+    (r"xattn/w[kv]/w$", ("embed", "kv_heads")),
+    (r"xattn/wo/w$", ("heads", "embed")),
+    (r"(gate_attn|gate_ffn)$", ()),
+    (r"xffn/w_(gate|up)/w$", ("embed", "mlp")),
+    (r"xffn/w_down/w$", ("mlp", "embed")),
+    (r"(ln_x1|ln_x2)/(scale|bias)$", ("embed",)),
+] + _BASE_RULES
+
+
+def _cross_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_x1": nn.rmsnorm_init(cfg.d_model),
+        "xattn": lc.gqa_init(k1, cfg),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "ln_x2": nn.rmsnorm_init(cfg.d_model),
+        "xffn": lc.ffn_init(k2, cfg, binary=False),
+        "gate_ffn": jnp.zeros((), jnp.float32),
+    }
+
+
+def _n_cross(cfg):
+    return cfg.n_layers // cfg.cross_every
+
+
+def vlm_init(key, cfg: ModelConfig):
+    from repro.models.transformer import lm_init
+    p = lm_init(key, cfg)
+    kx = jax.random.fold_in(key, 777)
+    keys = jax.random.split(kx, _n_cross(cfg))
+    p["cross"] = jax.vmap(lambda k: _cross_block_init(k, cfg))(keys)
+    return p
+
+
+def _patch_kv(p, patches, cfg):
+    b, t, _ = patches.shape
+    dh = cfg.kv_head_dim()
+    k = nn.dense_apply(p["wk"], patches, compute_dtype=lc.cdt(cfg))
+    v = nn.dense_apply(p["wv"], patches, compute_dtype=lc.cdt(cfg))
+    return (k.reshape(b, t, cfg.n_kv_heads, dh),
+            v.reshape(b, t, cfg.n_kv_heads, dh))
+
+
+def _cross_apply(p, x, cfg, patches):
+    b, s, _ = x.shape
+    dh = cfg.kv_head_dim()
+    h = nn.rmsnorm_apply(p["ln_x1"], x)
+    q = nn.dense_apply(p["xattn"]["wq"], h,
+                       compute_dtype=lc.cdt(cfg)).reshape(b, s,
+                                                          cfg.n_heads, dh)
+    k, v = _patch_kv(p["xattn"], patches, cfg)
+    o = attn_lib.dot_attention(q, k, v, causal=False)
+    a = nn.dense_apply(p["xattn"]["wo"], o.reshape(b, s, -1),
+                       compute_dtype=lc.cdt(cfg))
+    x = x + jnp.tanh(p["gate_attn"]) * a.astype(jnp.float32)
+    h = nn.rmsnorm_apply(p["ln_x2"], x.astype(a.dtype))
+    f = lc.ffn_apply(p["xffn"], h, cfg)
+    x = x + jnp.tanh(p["gate_ffn"]) * f.astype(jnp.float32)
+    return x.astype(a.dtype)
+
+
+def _interleaved(params, cfg, x, positions, patches, *, mode,
+                 caches=None, max_len=None):
+    """Walk self segments, inserting cross blocks every cross_every layers.
+
+    mode: 'apply' | 'prefill' | 'decode'. Returns (x, new_caches, aux).
+    Self-block segment boundaries get split at cross insertion points.
+    """
+    segs = lc.build_segments(cfg)
+    # split segments at cross-attention boundaries
+    split = []
+    for sig, start, count in segs:
+        s0 = start
+        while count > 0:
+            nxt = ((s0 // cfg.cross_every) + 1) * cfg.cross_every
+            take = min(count, nxt - s0)
+            split.append((sig, s0, take))
+            s0 += take
+            count -= take
+    aux_total = jnp.float32(0.0)
+    new_caches = {"self": {}, "cross": caches["cross"] if caches else None}
+    seg_offsets = {}
+    off = 0
+    for si, (sig, start, count) in enumerate(segs):
+        seg_offsets[f"seg{si}"] = (start, count)
+
+    # stacked self params are stored per original segment; we index slices
+    cross_i = 0
+    consumed = {f"seg{si}": 0 for si in range(len(segs))}
+    for sig, start, count in split:
+        # locate owning original segment
+        for si, (s, st, ct) in enumerate(segs):
+            if st <= start < st + ct:
+                key = f"seg{si}"
+                base = start - st
+                break
+        stacked = jax.tree.map(lambda a: a[base:base + count],
+                               params["blocks"][key])
+        if mode == "apply":
+            def one(x, p, sig=sig):
+                return lc.block_apply(p, x, cfg, sig, positions=positions)
+            x, auxs = jax.lax.scan(one, x, stacked)
+            aux_total = aux_total + auxs.sum()
+        elif mode == "prefill":
+            def one(x, p, sig=sig):
+                return lc.block_prefill(p, x, cfg, sig, positions=positions,
+                                        max_len=max_len)
+            x, c = jax.lax.scan(one, x, stacked)
+            new_caches["self"].setdefault(key, []).append(c)
+        else:  # decode
+            c_in = caches["self"][key]
+            c_slice = jax.tree.map(lambda a: a[base:base + count], c_in)
+
+            def one(x, pc, sig=sig):
+                p, c = pc
+                return lc.block_decode(p, x, cfg, sig, c)
+            x, c2 = jax.lax.scan(one, x, (stacked, c_slice))
+            new_caches["self"].setdefault(key, []).append(c2)
+        # cross block after each cross_every boundary
+        end = start + count
+        if end % cfg.cross_every == 0 and cross_i < _n_cross(cfg):
+            pc = jax.tree.map(lambda a: a[cross_i], params["cross"])
+            x = _cross_apply(pc, x, cfg, patches)
+            cross_i += 1
+    # merge per-segment cache chunks back into full stacks
+    if mode in ("prefill", "decode"):
+        merged = {}
+        for key, chunks in new_caches["self"].items():
+            merged[key] = jax.tree.map(
+                lambda *a: jnp.concatenate(a, axis=0), *chunks)
+        new_caches["self"] = merged
+    return x, new_caches, aux_total
+
+
+def vlm_loss(params, cfg: ModelConfig, batch):
+    from repro.models.transformer import _embed, _logits
+    tokens, labels = batch["tokens"], batch["labels"]
+    positions = jnp.arange(tokens.shape[1])
+    x = _embed(params, cfg, tokens)
+    x, _, aux = _interleaved(params, cfg, x, positions, batch["patches"],
+                             mode="apply")
+    logits = _logits(params, cfg, x)
+    ce = lc.softmax_xent(logits, labels)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "loss": loss}
+
+
+def vlm_prefill(params, cfg: ModelConfig, tokens, patches, *, max_len=None):
+    from repro.models.transformer import _embed, _logits
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    x = _embed(params, cfg, tokens)
+    x, caches, _ = _interleaved(params, cfg, x, positions, patches,
+                                mode="prefill", max_len=max_len or s)
+    caches["cross"] = patches  # cross context reused at decode
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits[:, 0], caches
+
+
+def vlm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    caches = {"self": lc.init_segment_caches(cfg, batch, max_len,
+                                             dtype=lc.cdt(cfg))}
+    caches["cross"] = jnp.zeros((batch, cfg.n_patches, cfg.d_model),
+                                lc.cdt(cfg))
+    return caches
+
+
+def vlm_decode(params, cfg: ModelConfig, caches, tokens):
+    from repro.models.transformer import _embed, _logits
+    x = _embed(params, cfg, tokens)
+    x, new_caches, _ = _interleaved(params, cfg, x, None,
+                                    caches["cross"], mode="decode",
+                                    caches=caches)
+    new_caches["cross"] = caches["cross"]
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], new_caches

@@ -1,0 +1,216 @@
+"""Mamba2 (SSD) block: chunked state-space duality algorithm for training /
+prefill, O(1) recurrent state update for decode.
+
+The in-projection is split so the PrecisionPolicy can binarize the
+channel-mixing path (z, x) without touching the SSM dynamics (B, C, dt) —
+the paper's rule that I/O-adjacent / dynamics layers stay high precision.
+
+Sequence mixing is O(L * d * d_state) — sub-quadratic, so mamba archs run
+the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.binary_dense import binary_dense_apply, binary_dense_init
+from repro.nn import layers as nn
+
+HEAD_P = 64  # mamba2 head dim
+
+
+def dims(cfg: ModelConfig):
+    di = cfg.expand * cfg.d_model
+    nh = di // HEAD_P
+    return di, nh
+
+
+def mamba_init(key, cfg: ModelConfig, *, binary: bool):
+    d, ds = cfg.d_model, cfg.d_state
+    di, nh = dims(cfg)
+    ks = jax.random.split(key, 6)
+    pdt = jnp.dtype(cfg.param_dtype)
+    if binary:
+        in_zx = {"bin": binary_dense_init(ks[0], d, 2 * di, dtype=pdt)}
+        out_proj = {"bin": binary_dense_init(ks[1], di, d, dtype=pdt)}
+    else:
+        in_zx = nn.dense_init(ks[0], d, 2 * di, dtype=pdt)
+        out_proj = nn.dense_init(ks[1], di, d, dtype=pdt)
+    return {
+        "norm": nn.rmsnorm_init(d),
+        "in_zx": in_zx,
+        "in_bcdt": nn.dense_init(ks[2], d, 2 * ds + nh, dtype=jnp.float32),
+        "conv_w": (jax.random.normal(ks[3], (cfg.d_conv, di + 2 * ds),
+                                     jnp.float32) * 0.2),
+        "conv_b": jnp.zeros((di + 2 * ds,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gnorm": nn.rmsnorm_init(di),
+        "out": out_proj,
+    }
+
+
+def _dense_or_bin(p, x, cfg):
+    if "bin" in p:
+        from repro.core.binary_dense import binary_dense_apply_any
+        return binary_dense_apply_any(p["bin"], x,
+                                      mode=cfg.policy.binary_mode)
+    return nn.dense_apply(p, x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv: u (B, L, C), w (W, C) -> (B, L, C)."""
+    wlen = w.shape[0]
+    uf = u.astype(jnp.float32)
+    out = jnp.zeros_like(uf)
+    for i in range(wlen):
+        shift = wlen - 1 - i
+        ui = jnp.pad(uf, ((0, 0), (shift, 0), (0, 0)))[:, :uf.shape[1]]
+        out = out + ui * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    """Run both projections + conv; returns z, xs, Bm, Cm, dt (pre-softplus)
+    and the raw conv input (for decode cache priming)."""
+    ds = cfg.d_state
+    di, nh = dims(cfg)
+    zx = _dense_or_bin(p["in_zx"], x, cfg)
+    z, xin = zx[..., :di], zx[..., di:]
+    bcdt = nn.dense_apply(p["in_bcdt"], x, compute_dtype=jnp.float32)
+    bm, cm, dt = (bcdt[..., :ds], bcdt[..., ds:2 * ds], bcdt[..., 2 * ds:])
+    conv_in = jnp.concatenate(
+        [xin.astype(jnp.float32), bm, cm], axis=-1)     # (B, L, di+2ds)
+    return z, conv_in, dt
+
+
+def _post_conv(conv_out, cfg):
+    ds = cfg.d_state
+    di, _ = dims(cfg)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :di]
+    bm = conv_out[..., di:di + ds]
+    cm = conv_out[..., di + ds:]
+    return xs, bm, cm
+
+
+def ssd_chunked(xt, alpha_log, bm, cm, *, chunk: int, h0=None):
+    """Chunked SSD.
+
+    xt (B, L, H, P) — dt-scaled inputs; alpha_log (B, L, H) — log decay
+    (negative); bm, cm (B, L, ds) shared across heads (n_groups=1).
+    Returns (y (B, L, H, P), h_final (B, H, P, ds)).
+    """
+    b, l, h, p = xt.shape
+    ds = bm.shape[-1]
+    l0 = l
+    if l % chunk:  # pad tail: alpha_log=0 (decay 1) + zero inputs leave
+        pad = chunk - l % chunk  # the state untouched past the real tokens
+        xt = jnp.pad(xt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        alpha_log = jnp.pad(alpha_log, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    n = l // chunk
+    xt = xt.reshape(b, n, chunk, h, p)
+    al = alpha_log.reshape(b, n, chunk, h)
+    bm = bm.reshape(b, n, chunk, ds)
+    cm = cm.reshape(b, n, chunk, ds)
+
+    cum = jnp.cumsum(al, axis=2)                       # (B,N,Q,H)
+    # intra-chunk: S[b,n,h,i,j] = (C_i . B_j) exp(cum_i - cum_j), j <= i
+    cb = jnp.einsum("bnis,bnjs->bnij", cm, bm)         # (B,N,Q,Q)
+    cum_t = cum.transpose(0, 1, 3, 2)                  # (B,N,H,Q)
+    diff = cum_t[..., :, None] - cum_t[..., None, :]   # (B,N,H,Q,Q)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    # mask BEFORE exp: the upper triangle has positive diffs that overflow
+    dec = jnp.exp(jnp.where(tri[None, None, None], diff, -jnp.inf))
+    s = cb[:, :, None, :, :] * dec
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", s, xt)
+
+    # inter-chunk state carry
+    g_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,N,Q,H)
+    contrib = jnp.einsum("bnqhp,bnqs,bnqh->bnhps", xt, bm, g_end)
+    a_end = jnp.exp(cum[:, :, -1, :])                  # (B,N,H)
+
+    def carry(hprev, inp):
+        contrib_n, a_n = inp
+        hnew = a_n[..., None, None] * hprev + contrib_n
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, ds), jnp.float32)
+    hfin, hprevs = jax.lax.scan(
+        carry, h0, (contrib.swapaxes(0, 1), a_end.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)                     # (B,N,H,P,ds)
+    y_inter = jnp.einsum("bnqs,bnhps,bnqh->bnqhp", cm, hprevs,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y[:, :l0], hfin
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """Full-sequence forward. x (B, L, d)."""
+    di, nh = dims(cfg)
+    res = x
+    xn = nn.rmsnorm_apply(p["norm"], x)
+    z, conv_in, dt = _split_proj(p, xn, cfg)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, bm, cm = _post_conv(conv_out, cfg)
+
+    b, l, _ = x.shape
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])  # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+    alpha_log = dt * a[None, None, :]
+    xh = xs.reshape(b, l, nh, HEAD_P)
+    xt = xh * dt[..., None]
+    y, hfin = ssd_chunked(xt, alpha_log, bm, cm,
+                          chunk=min(cfg.ssm_chunk, l))
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, di)
+    y = nn.rmsnorm_apply(p["gnorm"],
+                         (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    out = res + _dense_or_bin(p["out"], y, cfg).astype(x.dtype)
+    if return_state:
+        conv_tail = conv_in[:, -(cfg.d_conv - 1):, :]
+        return out, {"h": hfin, "conv": conv_tail}
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int):
+    di, nh = dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, HEAD_P, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di + 2 * cfg.d_state),
+                          jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cfg: ModelConfig, cache):
+    """One-token recurrent step. x (B, 1, d)."""
+    di, nh = dims(cfg)
+    ds = cfg.d_state
+    res = x
+    xn = nn.rmsnorm_apply(p["norm"], x)
+    z, conv_in, dt = _split_proj(p, xn, cfg)            # (B,1,*)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+    xs, bm, cm = _post_conv(conv_out[:, None, :], cfg)
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"][None, :])   # (B,H)
+    a = -jnp.exp(p["a_log"])
+    alpha = jnp.exp(dt * a[None, :])                         # (B,H)
+    xh = xs[:, 0].reshape(-1, nh, HEAD_P)
+    xt = xh * dt[..., None]
+    h = cache["h"] * alpha[..., None, None] + \
+        jnp.einsum("bhp,bs->bhps", xt, bm[:, 0])
+    y = jnp.einsum("bs,bhps->bhp", cm[:, 0], h)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di)
+    y = nn.rmsnorm_apply(p["gnorm"],
+                         (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    out = res + _dense_or_bin(p["out"], y, cfg).astype(x.dtype)
+    return out, {"h": h, "conv": window[:, 1:, :]}

@@ -1,0 +1,160 @@
+"""RWKV6 "Finch": attention-free time-mix with data-dependent decay.
+
+Time-mix keeps the headline Finch feature — per-token, per-channel decay
+w_t = exp(-exp(w0 + lora(x))) — and uses a lax.scan recurrence over tokens
+(state per head is a (hd x hd) matrix). Channel-mix is the squared-relu FFN,
+binarizable by the PrecisionPolicy; the time-mix projections stay float
+(decay dynamics collapse under sign(), see DESIGN.md §Arch-applicability).
+
+O(L) in sequence length -> runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.binary_dense import binary_dense_apply, binary_dense_init
+from repro.nn import layers as nn
+
+DECAY_LORA = 64
+
+
+def rwkv_block_init(key, cfg: ModelConfig, *, binary: bool):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    pdt = jnp.dtype(cfg.param_dtype)
+    hd = cfg.head_dim or 64
+    nh = d // hd
+    p = {
+        "ln1": nn.layernorm_init(d),
+        "ln2": nn.layernorm_init(d),
+        # time-mix
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),  # r,k,v,g,w
+        "w_r": nn.dense_init(ks[1], d, d, dtype=pdt),
+        "w_k": nn.dense_init(ks[2], d, d, dtype=pdt),
+        "w_v": nn.dense_init(ks[3], d, d, dtype=pdt),
+        "w_g": nn.dense_init(ks[4], d, d, dtype=pdt),
+        "w_o": nn.dense_init(ks[5], d, d, dtype=pdt),
+        "w0": jnp.full((d,), -6.0, jnp.float32),   # base log-log decay
+        "w_lora_a": (jax.random.normal(ks[6], (d, DECAY_LORA), jnp.float32)
+                     * 0.01),
+        "w_lora_b": (jax.random.normal(ks[7], (DECAY_LORA, d), jnp.float32)
+                     * 0.01),
+        "u": jax.random.normal(ks[8], (d,), jnp.float32) * 0.1,  # bonus
+        "gn": nn.layernorm_init(d),                 # per-head groupnorm approx
+    }
+    # channel-mix
+    p["mu_c"] = jax.random.uniform(ks[9], (2, d), jnp.float32)  # k, r
+    if binary:
+        p["c_k"] = {"bin": binary_dense_init(ks[10], d, dff, dtype=pdt)}
+        p["c_v"] = {"bin": binary_dense_init(ks[11], dff, d, dtype=pdt)}
+    else:
+        p["c_k"] = nn.dense_init(ks[10], d, dff, dtype=pdt)
+        p["c_v"] = nn.dense_init(ks[11], dff, d, dtype=pdt)
+    p["c_r"] = nn.dense_init(jax.random.fold_in(key, 99), d, d, dtype=pdt)
+    return p
+
+
+def _dense_or_bin(p, x, cfg):
+    if "bin" in p:
+        from repro.core.binary_dense import binary_dense_apply_any
+        return binary_dense_apply_any(p["bin"], x,
+                                      mode=cfg.policy.binary_mode)
+    return nn.dense_apply(p, x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+
+
+def _shift(x, x_prev):
+    """Token shift: returns x_{t-1} sequence. x (B,L,d); x_prev (B,1,d)."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, nh, hd, state0):
+    """Recurrent wkv. r,k,v,w (B,L,d) f32; state0 (B,nh,hd,hd).
+
+    y_t = r_t . (S + u*k_t (x) v_t);  S' = diag(w_t) S + k_t (x) v_t
+    """
+    b, l, d = r.shape
+
+    def head(x):
+        return x.reshape(b, l, nh, hd).transpose(1, 0, 2, 3)  # (L,B,H,hd)
+
+    rr, kk, vv, ww = head(r), head(k), head(v), head(w)
+    uu = u.reshape(nh, hd)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                        # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]    # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + uu[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    sfin, ys = jax.lax.scan(step, state0, (rr, kk, vv, ww))
+    return ys.transpose(1, 0, 2, 3).reshape(b, l, d), sfin
+
+
+def time_mix(p, x, cfg: ModelConfig, x_prev, state0):
+    """x (B,L,d) normed; returns (out, (last_x, state))."""
+    d = cfg.d_model
+    hd = cfg.head_dim or 64
+    nh = d // hd
+    xf = x.astype(jnp.float32)
+    xs = _shift(xf, x_prev)
+    mix = lambda i: xf * p["mu"][i][None, None] + \
+        xs * (1 - p["mu"][i][None, None])
+    cd = jnp.dtype(cfg.compute_dtype)
+    r = nn.dense_apply(p["w_r"], mix(0).astype(cd)).astype(jnp.float32)
+    k = nn.dense_apply(p["w_k"], mix(1).astype(cd)).astype(jnp.float32)
+    v = nn.dense_apply(p["w_v"], mix(2).astype(cd)).astype(jnp.float32)
+    g = nn.dense_apply(p["w_g"], mix(3).astype(cd)).astype(jnp.float32)
+    xw = mix(4)
+    dd = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + dd))      # (B,L,d) in (0,1)
+    y, sfin = _wkv_scan(r, k, v, w, p["u"], nh, hd, state0)
+    y = nn.layernorm_apply(p["gn"], y)
+    y = y * jax.nn.silu(g)
+    out = nn.dense_apply(p["w_o"], y.astype(cd))
+    return out, (xf[:, -1:], sfin)
+
+
+def channel_mix(p, x, cfg: ModelConfig, x_prev):
+    xf = x.astype(jnp.float32)
+    xs = _shift(xf, x_prev)
+    xk = xf * p["mu_c"][0][None, None] + xs * (1 - p["mu_c"][0][None, None])
+    xr = xf * p["mu_c"][1][None, None] + xs * (1 - p["mu_c"][1][None, None])
+    cd = jnp.dtype(cfg.compute_dtype)
+    k = _dense_or_bin(p["c_k"], xk.astype(cd), cfg).astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(k))
+    kv = _dense_or_bin(p["c_v"], k.astype(cd), cfg).astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        nn.dense_apply(p["c_r"], xr.astype(cd)).astype(jnp.float32))
+    return (r * kv).astype(x.dtype), xf[:, -1:]
+
+
+def rwkv_block_apply(p, x, cfg: ModelConfig, cache=None):
+    """cache: {'tm_x','tm_s','cm_x'} or None (zeros). Returns (x, cache)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    hd = cfg.head_dim or 64
+    nh = d // hd
+    if cache is None:
+        cache = rwkv_init_cache_block(cfg, b)
+    h = nn.layernorm_apply(p["ln1"], x)
+    tm, (tm_x, tm_s) = time_mix(p, h, cfg, cache["tm_x"], cache["tm_s"])
+    x = x + tm.astype(x.dtype)
+    h = nn.layernorm_apply(p["ln2"], x)
+    cm, cm_x = channel_mix(p, h, cfg, cache["cm_x"])
+    x = x + cm.astype(x.dtype)
+    return x, {"tm_x": tm_x, "tm_s": tm_s, "cm_x": cm_x}
+
+
+def rwkv_init_cache_block(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.head_dim or 64
+    nh = d // hd
+    return {
+        "tm_x": jnp.zeros((batch, 1, d), jnp.float32),
+        "tm_s": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "cm_x": jnp.zeros((batch, 1, d), jnp.float32),
+    }

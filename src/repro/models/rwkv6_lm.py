@@ -1,0 +1,116 @@
+"""RWKV6 language model: stacked Finch blocks with binary/float segments."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm_common as lc
+from repro.models import rwkv6
+from repro.nn import layers as nn
+
+PARAM_RULES = [
+    (r"embed/table$", ("vocab", "embed")),
+    (r"head/w$", ("embed", "vocab")),
+    (r"w_[rkvgo]/w$", ("embed", "heads")),
+    (r"w0$", ("heads",)),
+    (r"w_lora_a$", ("embed", None)),
+    (r"w_lora_b$", (None, "embed")),
+    (r"u$", ("heads",)),
+    (r"mu$", (None, "embed")),
+    (r"mu_c$", (None, "embed")),
+    (r"c_k/(w$|bin/w_latent$)", ("embed", "mlp")),
+    (r"c_k/bin/scale$", ("mlp",)),
+    (r"c_v/(w$|bin/w_latent$)", ("mlp", "embed")),
+    (r"c_v/bin/scale$", ("embed",)),
+    (r"c_r/w$", ("embed", "heads")),
+    (r"(ln1|ln2|ln_f|gn)/(scale|bias)$", ("embed",)),
+]
+
+
+def _segments(cfg: ModelConfig):
+    segs = []
+    for i in range(cfg.n_layers):
+        f = cfg.policy.block_is_binary(i, cfg.n_layers)
+        if segs and segs[-1][2] == f:
+            segs[-1] = (segs[-1][0], segs[-1][1] + 1, f)
+        else:
+            segs.append((i, 1, f))
+    return segs
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    blocks = {}
+    for si, (start, count, binary) in enumerate(_segments(cfg)):
+        keys = jax.random.split(jax.random.fold_in(ks[0], si), count)
+        blocks[f"seg{si}"] = jax.vmap(
+            lambda k: rwkv6.rwkv_block_init(k, cfg, binary=binary))(keys)
+    vp = lc.padded_vocab(cfg.vocab)
+    return {
+        "embed": nn.embedding_init(ks[1], vp, cfg.d_model,
+                                   dtype=lc.pdt(cfg)),
+        "blocks": blocks,
+        "ln_f": nn.layernorm_init(cfg.d_model),
+        "head": nn.dense_init(ks[2], cfg.d_model, vp, dtype=lc.pdt(cfg)),
+    }
+
+
+def _forward(params, cfg, tokens, caches):
+    """caches: {'seg{i}': stacked block cache} (zeros for training)."""
+    x = nn.embedding_lookup(params["embed"], tokens,
+                            compute_dtype=lc.cdt(cfg))
+    new = {}
+    for si, (start, count, binary) in enumerate(_segments(cfg)):
+        stacked = params["blocks"][f"seg{si}"]
+        cache = caches[f"seg{si}"]
+
+        def one(x, pc):
+            p, c = pc
+            return rwkv6.rwkv_block_apply(p, x, cfg, c)
+
+        x, c2 = jax.lax.scan(one, x, (stacked, cache))
+        new[f"seg{si}"] = c2
+    return x, new
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int, max_len: int = 0):
+    """RWKV cache is O(1) in sequence length (max_len unused)."""
+    caches = {}
+    for si, (start, count, binary) in enumerate(_segments(cfg)):
+        one = rwkv6.rwkv_init_cache_block(cfg, batch)
+        caches[f"seg{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one)
+    return caches
+
+
+def rwkv_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    h, _ = _forward(params, cfg, tokens,
+                    rwkv_init_cache(cfg, tokens.shape[0]))
+    h = nn.layernorm_apply(params["ln_f"], h)
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], h, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    ce = lc.softmax_xent(logits, batch["labels"])
+    return ce, {"ce": ce, "loss": ce}
+
+
+def rwkv_prefill(params, cfg: ModelConfig, tokens, *, max_len=None):
+    h, caches = _forward(params, cfg, tokens,
+                         rwkv_init_cache(cfg, tokens.shape[0]))
+    h = nn.layernorm_apply(params["ln_f"], h[:, -1:, :])
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], h, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    return logits[:, 0], caches
+
+
+def rwkv_decode(params, cfg: ModelConfig, caches, tokens):
+    h, caches = _forward(params, cfg, tokens, caches)
+    h = nn.layernorm_apply(params["ln_f"], h)
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], h, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    return logits[:, 0], caches

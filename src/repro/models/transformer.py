@@ -1,0 +1,137 @@
+"""Generic decoder LM: covers the dense archs (qwen3/qwen2/stablelm via GQA,
+minicpm3 via MLA) and the MoE archs (deepseek v2/v3 via MLA + MoE blocks +
+optional MTP). Everything is driven by ModelConfig + PrecisionPolicy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models import lm_common as lc
+from repro.nn import layers as nn
+
+# path-regex -> logical axes (see distributed/sharding.py); first match wins
+PARAM_RULES = [
+    (r"embed/table$", ("vocab", "embed")),
+    (r"head/w$", ("embed", "vocab")),
+    (r"attn/wq/w$", ("embed", "heads")),
+    (r"attn/wq/b$", ("heads",)),
+    (r"attn/w[kv]/w$", ("embed", "kv_heads")),
+    (r"attn/w[kv]/b$", ("kv_heads",)),
+    (r"attn/wo/w$", ("heads", "embed")),
+    (r"attn/w_dq/w$", ("embed", "kv_lora")),
+    (r"attn/w_uq/w$", ("kv_lora", "heads")),
+    (r"attn/w_dkv/w$", ("embed", "kv_lora")),
+    (r"attn/w_u[kv]/w$", ("kv_lora", "heads")),
+    (r"ffn/w_(gate|up)/w$", ("embed", "mlp")),
+    (r"ffn/w_down/w$", ("mlp", "embed")),
+    (r"ffn/bin_in/w_latent$", ("embed", "mlp")),
+    (r"ffn/bin_in/scale$", ("mlp",)),
+    (r"ffn/bin_out/w_latent$", ("mlp", "embed")),
+    (r"ffn/bin_out/scale$", ("embed",)),
+    (r"ffn/router/w$", ("embed", None)),
+    (r"ffn/router/bias$", (None,)),
+    (r"ffn/w_(gate|up)$", ("expert", "embed", None)),   # MoE expert stacks
+    (r"ffn/w_down$", ("expert", None, "embed")),
+    (r"ffn/s_(mid|out)$", ("expert", None)),
+    (r"ffn/shared/w_(gate|up)/w$", ("embed", "mlp")),
+    (r"ffn/shared/w_down/w$", ("mlp", "embed")),
+    (r"(ln1|ln2|ln_f|q_norm|k_norm|kv_norm)/(scale|bias)$", ("embed",)),
+    (r"mtp/proj/w$", ("embed", "embed")),
+]
+
+# shared-expert rules must match before the generic expert-stack rules
+PARAM_RULES.sort(key=lambda r: 0 if "shared" in r[0] else 1)
+
+
+def lm_init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    vp = lc.padded_vocab(cfg.vocab)
+    p = {
+        "embed": nn.embedding_init(k1, vp, cfg.d_model, dtype=lc.pdt(cfg)),
+        "blocks": lc.segments_init(k2, cfg),
+        "ln_f": nn.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = nn.dense_init(k3, cfg.d_model, vp, dtype=lc.pdt(cfg))
+    if cfg.use_mtp:
+        sig = lc.BlockSig("mla" if cfg.use_mla else "gqa", "float", False)
+        km1, km2 = jax.random.split(k4)
+        p["mtp"] = {
+            "proj": nn.dense_init(km1, 2 * cfg.d_model, cfg.d_model,
+                                  dtype=lc.pdt(cfg)),
+            "block": lc.block_init(km2, cfg, sig),
+            "ln": nn.rmsnorm_init(cfg.d_model),
+        }
+    return p
+
+
+def _logits(p, cfg, x):
+    x = nn.rmsnorm_apply(p["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = nn.embedding_logits(p["embed"], x,
+                                     compute_dtype=lc.cdt(cfg))
+    else:
+        logits = nn.dense_apply(p["head"], x, compute_dtype=lc.cdt(cfg))
+    logits = lc.mask_pad_logits(logits, cfg.vocab)
+    return wlc(logits, ("batch", "seq", "vocab"))
+
+
+def _embed(p, cfg, tokens):
+    x = nn.embedding_lookup(p["embed"], tokens, compute_dtype=lc.cdt(cfg))
+    return wlc(x, ("batch", "seq", "embed"))
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    positions = jnp.arange(tokens.shape[1])
+    x = _embed(params, cfg, tokens)
+    h, aux = lc.segments_apply(params["blocks"], x, cfg, positions=positions)
+    logits = _logits(params, cfg, h)
+    ce = lc.softmax_xent(logits, labels)
+    loss = ce + 0.01 * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.use_mtp:
+        # DeepSeek-V3 MTP: predict t+2 from h_t combined with emb(t+1)
+        mtp = params["mtp"]
+        emb_next = _embed(params, cfg, labels)  # labels are tokens t+1
+        hcat = jnp.concatenate(
+            [nn.rmsnorm_apply(mtp["ln"], h), emb_next], axis=-1)
+        h2 = nn.dense_apply(mtp["proj"], hcat, compute_dtype=lc.cdt(cfg))
+        sig = lc.BlockSig("mla" if cfg.use_mla else "gqa", "float", False)
+        h2, _ = lc.block_apply(mtp["block"], h2, cfg, sig,
+                               positions=positions)
+        logits2 = _logits(params, cfg, h2)
+        # targets: labels shifted left (token t+2); drop the last column
+        ce2 = lc.softmax_xent(logits2[:, :-1], labels[:, 1:])
+        loss = loss + 0.3 * ce2
+        metrics["mtp_ce"] = ce2
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, *, max_len=None):
+    """Full-sequence forward; returns (last-token logits, decode caches)."""
+    s = tokens.shape[1]
+    max_len = max_len or s
+    positions = jnp.arange(s)
+    x = _embed(params, cfg, tokens)
+    h, caches = lc.segments_prefill(params["blocks"], x, cfg,
+                                    positions=positions, max_len=max_len)
+    logits = _logits(params, cfg, h[:, -1:, :])
+    return logits[:, 0], caches
+
+
+def lm_decode(params, cfg: ModelConfig, caches, tokens):
+    """tokens (B, 1) -> (logits (B, vocab), new caches)."""
+    x = _embed(params, cfg, tokens)
+    h, caches = lc.segments_decode(params["blocks"], x, cfg, caches)
+    logits = _logits(params, cfg, h)
+    return logits[:, 0], caches
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return lc.init_segment_caches(cfg, batch, max_len,
+                                  dtype=lc.cdt(cfg))

@@ -1,0 +1,265 @@
+"""Whisper-style encoder-decoder. The conv audio frontend is a STUB per the
+assignment: input_specs provide precomputed frame embeddings (B, T_enc, d).
+
+Decoder blocks: causal self-attn + cross-attn over encoder states + FFN
+(binary in interior blocks per PrecisionPolicy). Decode caches the self-attn
+KV plus the (static) cross-attn KV computed once at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm_common as lc
+from repro.nn import attention as attn_lib
+from repro.nn import layers as nn
+
+PARAM_RULES = [
+    (r"embed/table$", ("vocab", "embed")),
+    (r"pos_emb$", ("seq", "embed")),
+    (r"(attn|xattn)/wq/w$", ("embed", "heads")),
+    (r"(attn|xattn)/wq/b$", ("heads",)),
+    (r"(attn|xattn)/w[kv]/w$", ("embed", "kv_heads")),
+    (r"(attn|xattn)/w[kv]/b$", ("kv_heads",)),
+    (r"(attn|xattn)/wo/w$", ("heads", "embed")),
+    (r"ffn/w_(gate|up)/w$", ("embed", "mlp")),
+    (r"ffn/w_down/w$", ("mlp", "embed")),
+    (r"ffn/bin_in/w_latent$", ("embed", "mlp")),
+    (r"ffn/bin_in/scale$", ("mlp",)),
+    (r"ffn/bin_out/w_latent$", ("mlp", "embed")),
+    (r"ffn/bin_out/scale$", ("embed",)),
+    (r"head/w$", ("embed", "vocab")),
+    (r"(ln1|ln2|ln3|ln_f|ln_enc)/(scale|bias)$", ("embed",)),
+]
+
+MAX_DEC_LEN = 32768 * 2  # learned positional table upper bound
+
+
+def _enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": nn.layernorm_init(cfg.d_model),
+        "attn": lc.gqa_init(k1, cfg),
+        "ln2": nn.layernorm_init(cfg.d_model),
+        "ffn": lc.ffn_init(k2, cfg, binary=False),
+    }
+
+
+def _dec_block_init(key, cfg, *, binary):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": nn.layernorm_init(cfg.d_model),
+        "attn": lc.gqa_init(k1, cfg),
+        "ln2": nn.layernorm_init(cfg.d_model),
+        "xattn": lc.gqa_init(k2, cfg),
+        "ln3": nn.layernorm_init(cfg.d_model),
+        "ffn": lc.ffn_init(k3, cfg, binary=binary),
+    }
+
+
+def _dec_segments(cfg: ModelConfig):
+    segs = []
+    for i in range(cfg.n_layers):
+        f = cfg.policy.block_is_binary(i, cfg.n_layers)
+        if segs and segs[-1][2] == f:
+            segs[-1] = (segs[-1][0], segs[-1][1] + 1, f)
+        else:
+            segs.append((i, 1, f))
+    return segs
+
+
+def whisper_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    enc = jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys)
+    dec = {}
+    for si, (start, count, binary) in enumerate(_dec_segments(cfg)):
+        keys = jax.random.split(jax.random.fold_in(ks[1], si), count)
+        dec[f"seg{si}"] = jax.vmap(
+            lambda k: _dec_block_init(k, cfg, binary=binary))(keys)
+    return {
+        "enc_blocks": enc,
+        "ln_enc": nn.layernorm_init(cfg.d_model),
+        "embed": nn.embedding_init(ks[2], lc.padded_vocab(cfg.vocab),
+                                   cfg.d_model, dtype=lc.pdt(cfg)),
+        "pos_emb": (jax.random.normal(ks[3], (MAX_DEC_LEN, cfg.d_model),
+                                      jnp.float32) * 0.01
+                    ).astype(lc.pdt(cfg)),
+        "dec_blocks": dec,
+        "ln_f": nn.layernorm_init(cfg.d_model),
+        "head": nn.dense_init(ks[4], cfg.d_model,
+                              lc.padded_vocab(cfg.vocab),
+                              dtype=lc.pdt(cfg)),
+    }
+
+
+def _encode(params, cfg, frames):
+    """frames (B, T_enc, d) — stub frontend output + sinusoidal pos."""
+    t = frames.shape[1]
+    x = frames.astype(lc.cdt(cfg)) + \
+        nn.sinusoidal_positions(t, cfg.d_model).astype(lc.cdt(cfg))[None]
+
+    def one(x, p):
+        h = nn.layernorm_apply(p["ln1"], x)
+        q, k, v = lc.gqa_qkv(p["attn"], h, cfg,
+                             jnp.arange(x.shape[1]))
+        o = attn_lib.dot_attention(q, k, v, causal=False)
+        x = x + nn.dense_apply(p["attn"]["wo"],
+                               o.reshape(*x.shape[:2], -1),
+                               compute_dtype=lc.cdt(cfg))
+        h = nn.layernorm_apply(p["ln2"], x)
+        return x + lc.ffn_apply(p["ffn"], h, cfg), None
+
+    x, _ = jax.lax.scan(one, x, params["enc_blocks"])
+    return nn.layernorm_apply(params["ln_enc"], x)
+
+
+def _xattn_kv(p, enc, cfg):
+    b, t, _ = enc.shape
+    dh = cfg.kv_head_dim()
+    k = nn.dense_apply(p["wk"], enc, compute_dtype=lc.cdt(cfg))
+    v = nn.dense_apply(p["wv"], enc, compute_dtype=lc.cdt(cfg))
+    return (k.reshape(b, t, cfg.n_kv_heads, dh),
+            v.reshape(b, t, cfg.n_kv_heads, dh))
+
+
+def _xattn(p, x, k, v, cfg):
+    b, s, _ = x.shape
+    dh = cfg.kv_head_dim()
+    q = nn.dense_apply(p["wq"], x,
+                       compute_dtype=lc.cdt(cfg)).reshape(b, s,
+                                                          cfg.n_heads, dh)
+    o = attn_lib.dot_attention(q, k, v, causal=False)
+    return nn.dense_apply(p["wo"], o.reshape(b, s, -1),
+                          compute_dtype=lc.cdt(cfg))
+
+
+def _dec_block(p, x, cfg, enc_kv, positions):
+    h = nn.layernorm_apply(p["ln1"], x)
+    q, k, v = lc.gqa_qkv(p["attn"], h, cfg, positions)
+    o = attn_lib.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+    x = x + nn.dense_apply(p["attn"]["wo"], o.reshape(*x.shape[:2], -1),
+                           compute_dtype=lc.cdt(cfg))
+    h = nn.layernorm_apply(p["ln2"], x)
+    ek, ev = _xattn_kv(p["xattn"], enc_kv, cfg)
+    x = x + _xattn(p["xattn"], h, ek, ev, cfg)
+    h = nn.layernorm_apply(p["ln3"], x)
+    return x + lc.ffn_apply(p["ffn"], h, cfg)
+
+
+def whisper_loss(params, cfg: ModelConfig, batch):
+    enc = _encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = nn.embedding_lookup(params["embed"], tokens,
+                            compute_dtype=lc.cdt(cfg))
+    x = x + params["pos_emb"][:s].astype(lc.cdt(cfg))[None]
+    positions = jnp.arange(s)
+    for si, (start, count, binary) in enumerate(_dec_segments(cfg)):
+        def one(x, p):
+            return _dec_block(p, x, cfg, enc, positions), None
+        x, _ = jax.lax.scan(one, x, params["dec_blocks"][f"seg{si}"])
+    x = nn.layernorm_apply(params["ln_f"], x)
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], x, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    ce = lc.softmax_xent(logits, batch["labels"])
+    return ce, {"ce": ce, "loss": ce}
+
+
+def whisper_prefill(params, cfg: ModelConfig, tokens, frames, *,
+                    max_len=None):
+    """Returns (last logits, caches); caches hold self-KV + cross-KV."""
+    enc = _encode(params, cfg, frames)
+    s = tokens.shape[1]
+    max_len = max_len or s
+    positions = jnp.arange(s)
+    x = nn.embedding_lookup(params["embed"], tokens,
+                            compute_dtype=lc.cdt(cfg))
+    x = x + params["pos_emb"][:s].astype(lc.cdt(cfg))[None]
+    caches = {}
+    for si, (start, count, binary) in enumerate(_dec_segments(cfg)):
+        def one(x, p):
+            b = x.shape[0]
+            h = nn.layernorm_apply(p["ln1"], x)
+            q, k, v = lc.gqa_qkv(p["attn"], h, cfg, positions)
+            o = attn_lib.chunked_causal_attention(q, k, v,
+                                                  chunk=cfg.attn_chunk)
+            x2 = x + nn.dense_apply(p["attn"]["wo"],
+                                    o.reshape(*x.shape[:2], -1),
+                                    compute_dtype=lc.cdt(cfg))
+            h = nn.layernorm_apply(p["ln2"], x2)
+            ek, ev = _xattn_kv(p["xattn"], enc, cfg)
+            x2 = x2 + _xattn(p["xattn"], h, ek, ev, cfg)
+            h = nn.layernorm_apply(p["ln3"], x2)
+            x2 = x2 + lc.ffn_apply(p["ffn"], h, cfg)
+            cache = {"k": lc._pad_time(k, max_len),
+                     "v": lc._pad_time(v, max_len),
+                     "len": jnp.full((b,), s, jnp.int32),
+                     "ek": ek, "ev": ev}
+            return x2, cache
+        x, cache = jax.lax.scan(one, x, params["dec_blocks"][f"seg{si}"])
+        caches[f"seg{si}"] = cache
+    x = nn.layernorm_apply(params["ln_f"], x[:, -1:])
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], x, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    return logits[:, 0], caches
+
+
+def whisper_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    caches = {}
+    dh = cfg.kv_head_dim()
+    for si, (start, count, binary) in enumerate(_dec_segments(cfg)):
+        one = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads, dh,
+                                     lc.cdt(cfg))
+        one["ek"] = jnp.zeros((batch, cfg.n_audio_frames, cfg.n_kv_heads,
+                               dh), lc.cdt(cfg))
+        one["ev"] = jnp.zeros_like(one["ek"])
+        caches[f"seg{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one)
+    return caches
+
+
+def whisper_decode(params, cfg: ModelConfig, caches, tokens):
+    b = tokens.shape[0]
+    x = nn.embedding_lookup(params["embed"], tokens,
+                            compute_dtype=lc.cdt(cfg))
+    # position = current cache length (same for all layers)
+    pos0 = caches["seg0"]["len"][0]                       # (B,)
+    x = x + jnp.take(params["pos_emb"], pos0,
+                     axis=0).astype(x.dtype)[:, None, :]
+    new = {}
+    for si, (start, count, binary) in enumerate(_dec_segments(cfg)):
+        cache = caches[f"seg{si}"]
+
+        def one(x, pc):
+            p, c = pc
+            pos = c["len"]
+            h = nn.layernorm_apply(p["ln1"], x)
+            q, k, v = lc.gqa_qkv(p["attn"], h, cfg, pos[:, None])
+            kv = {"k": c["k"], "v": c["v"], "len": c["len"]}
+            kv = attn_lib.cache_update_decode(kv, k, v,
+                                              method=cfg.cache_update)
+            o = attn_lib.dot_attention(q, kv["k"], kv["v"], causal=False,
+                                       kv_len=kv["len"])
+            x2 = x + nn.dense_apply(p["attn"]["wo"],
+                                    o.reshape(b, 1, -1),
+                                    compute_dtype=lc.cdt(cfg))
+            h = nn.layernorm_apply(p["ln2"], x2)
+            x2 = x2 + _xattn(p["xattn"], h, c["ek"], c["ev"], cfg)
+            h = nn.layernorm_apply(p["ln3"], x2)
+            x2 = x2 + lc.ffn_apply(p["ffn"], h, cfg)
+            c2 = {**kv, "ek": c["ek"], "ev": c["ev"]}
+            return x2, c2
+
+        x, c2 = jax.lax.scan(one, x, (params["dec_blocks"][f"seg{si}"],
+                                      cache))
+        new[f"seg{si}"] = c2
+    x = nn.layernorm_apply(params["ln_f"], x)
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], x, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    return logits[:, 0], new

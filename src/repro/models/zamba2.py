@@ -1,0 +1,223 @@
+"""Zamba2: Mamba2 backbone with a SHARED attention+MLP block invoked after
+every `attn_every` mamba blocks (weight reuse across invocations — the
+Zamba2 signature; per-invocation LoRA adapters are omitted, see DESIGN.md).
+
+Layer processing: mamba blocks are scanned in flag-uniform runs inside each
+group; the shared block closes over its (unstacked) params, so the outer
+python loop over groups stays O(n_groups) in HLO size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm_common as lc
+from repro.models import mamba2
+from repro.nn import layers as nn
+
+PARAM_RULES = [
+    (r"embed/table$", ("vocab", "embed")),
+    (r"head/w$", ("embed", "vocab")),
+    (r"in_zx/(w$|bin/w_latent$)", ("embed", "mlp")),
+    (r"in_zx/bin/scale$", ("mlp",)),
+    (r"in_bcdt/w$", ("embed", None)),
+    (r"out/(w$|bin/w_latent$)", ("mlp", "embed")),
+    (r"out/bin/scale$", ("embed",)),
+    (r"conv_w$", (None, "dconv")),
+    (r"conv_b$", ("dconv",)),
+    (r"(a_log|d_skip|dt_bias)$", (None,)),
+    (r"gnorm/scale$", ("mlp",)),
+    (r"shared/attn/wq/w$", ("embed", "heads")),
+    (r"shared/attn/w[kv]/w$", ("embed", "kv_heads")),
+    (r"shared/attn/wo/w$", ("heads", "embed")),
+    (r"shared/ffn/w_(gate|up)/w$", ("embed", "mlp")),
+    (r"shared/ffn/w_down/w$", ("mlp", "embed")),
+    (r"(norm|ln1|ln2|ln_f)/(scale|bias)$", ("embed",)),
+]
+
+
+def _flags(cfg: ModelConfig):
+    return [cfg.policy.block_is_binary(i, cfg.n_layers)
+            for i in range(cfg.n_layers)]
+
+
+def _runs(cfg: ModelConfig):
+    """[(start, count, binary)] — flag-uniform runs split at group edges."""
+    flags = _flags(cfg)
+    runs = []
+    for i, f in enumerate(flags):
+        boundary = i % cfg.attn_every == 0
+        if runs and runs[-1][2] == f and not boundary:
+            runs[-1] = (runs[-1][0], runs[-1][1] + 1, f)
+        else:
+            runs.append((i, 1, f))
+    return runs
+
+
+def zamba_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    runs = _runs(cfg)
+    blocks = {}
+    for ri, (start, count, binary) in enumerate(runs):
+        keys = jax.random.split(jax.random.fold_in(ks[0], ri), count)
+        blocks[f"run{ri}"] = jax.vmap(
+            lambda k: mamba2.mamba_init(k, cfg, binary=binary))(keys)
+    shared = {
+        "ln1": nn.rmsnorm_init(cfg.d_model),
+        "attn": lc.gqa_init(ks[1], cfg),
+        "ln2": nn.rmsnorm_init(cfg.d_model),
+        "ffn": lc.ffn_init(ks[2], cfg, binary=False),
+    }
+    vp = lc.padded_vocab(cfg.vocab)
+    p = {
+        "embed": nn.embedding_init(ks[3], vp, cfg.d_model,
+                                   dtype=lc.pdt(cfg)),
+        "blocks": blocks,
+        "shared": shared,
+        "ln_f": nn.rmsnorm_init(cfg.d_model),
+        "head": nn.dense_init(ks[4], cfg.d_model, vp, dtype=lc.pdt(cfg)),
+    }
+    return p
+
+
+def _shared_apply(p, x, cfg, positions):
+    h = nn.rmsnorm_apply(p["ln1"], x)
+    x = x + lc.gqa_apply(p["attn"], h, cfg, positions=positions)
+    h = nn.rmsnorm_apply(p["ln2"], x)
+    return x + lc.ffn_apply(p["ffn"], h, cfg)
+
+
+def _shared_decode(p, x, cfg, cache):
+    h = nn.rmsnorm_apply(p["ln1"], x)
+    a, cache = lc.gqa_decode(p["attn"], h, cfg, cache)
+    x = x + a
+    h = nn.rmsnorm_apply(p["ln2"], x)
+    return x + lc.ffn_apply(p["ffn"], h, cfg), cache
+
+
+def _n_shared_calls(cfg):
+    return cfg.n_layers // cfg.attn_every
+
+
+def zamba_hidden(params, cfg: ModelConfig, tokens, *, collect_caches=False,
+                 max_len=None):
+    """Returns (h, caches) — caches filled when collect_caches (prefill)."""
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    x = nn.embedding_lookup(params["embed"], tokens,
+                            compute_dtype=lc.cdt(cfg))
+    runs = _runs(cfg)
+    mcaches, acaches = [], []
+    shared_i = 0
+    for ri, (start, count, binary) in enumerate(runs):
+        stacked = params["blocks"][f"run{ri}"]
+
+        def one(x, p):
+            if collect_caches:
+                y, st = mamba2.mamba_apply(p, x, cfg, return_state=True)
+                return y, st
+            return mamba2.mamba_apply(p, x, cfg), None
+
+        x, sts = jax.lax.scan(one, x, stacked)
+        if collect_caches:
+            mcaches.append(sts)
+        # shared attention after every attn_every blocks
+        end = start + count
+        while (shared_i + 1) * cfg.attn_every <= end:
+            if collect_caches:
+                x, c = _shared_prefill(params["shared"], x, cfg, positions,
+                                       max_len or s)
+                acaches.append(c)
+            else:
+                x = _shared_apply(params["shared"], x, cfg, positions)
+            shared_i += 1
+    caches = None
+    if collect_caches:
+        caches = {"mamba": mcaches,
+                  "attn": jax.tree.map(lambda *a: jnp.stack(a), *acaches)}
+    return x, caches
+
+
+def _shared_prefill(p, x, cfg, positions, max_len):
+    b, s, _ = x.shape
+    h = nn.rmsnorm_apply(p["ln1"], x)
+    q, k, v = lc.gqa_qkv(p["attn"], h, cfg, positions)
+    from repro.nn import attention as attn_lib
+    o = attn_lib.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+    a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
+                       compute_dtype=lc.cdt(cfg))
+    cache = {"k": lc._pad_time(k, max_len), "v": lc._pad_time(v, max_len),
+             "len": jnp.full((b,), s, jnp.int32)}
+    x = x + a
+    h = nn.rmsnorm_apply(p["ln2"], x)
+    return x + lc.ffn_apply(p["ffn"], h, cfg), cache
+
+
+def zamba_loss(params, cfg: ModelConfig, batch):
+    h, _ = zamba_hidden(params, cfg, batch["tokens"])
+    h = nn.rmsnorm_apply(params["ln_f"], h)
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], h, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    ce = lc.softmax_xent(logits, batch["labels"])
+    return ce, {"ce": ce, "loss": ce}
+
+
+def zamba_prefill(params, cfg: ModelConfig, tokens, *, max_len=None):
+    h, caches = zamba_hidden(params, cfg, tokens, collect_caches=True,
+                             max_len=max_len)
+    h = nn.rmsnorm_apply(params["ln_f"], h[:, -1:, :])
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], h, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    return logits[:, 0], caches
+
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    runs = _runs(cfg)
+    mcaches = []
+    for ri, (start, count, binary) in enumerate(runs):
+        one = mamba2.mamba_init_cache(cfg, batch)
+        mcaches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one))
+    n_attn = _n_shared_calls(cfg)
+    from repro.nn import attention as attn_lib
+    ac = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                cfg.kv_head_dim(), lc.cdt(cfg))
+    acaches = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_attn, *a.shape)), ac)
+    return {"mamba": mcaches, "attn": acaches}
+
+
+def zamba_decode(params, cfg: ModelConfig, caches, tokens):
+    x = nn.embedding_lookup(params["embed"], tokens,
+                            compute_dtype=lc.cdt(cfg))
+    runs = _runs(cfg)
+    new_m, new_a = [], []
+    shared_i = 0
+    for ri, (start, count, binary) in enumerate(runs):
+        stacked = params["blocks"][f"run{ri}"]
+        cache = caches["mamba"][ri]
+
+        def one(x, pc):
+            p, c = pc
+            y, c2 = mamba2.mamba_decode(p, x, cfg, c)
+            return y, c2
+
+        x, c2 = jax.lax.scan(one, x, (stacked, cache))
+        new_m.append(c2)
+        end = start + count
+        while (shared_i + 1) * cfg.attn_every <= end:
+            a_c = jax.tree.map(lambda a: a[shared_i], caches["attn"])
+            x, a_c2 = _shared_decode(params["shared"], x, cfg, a_c)
+            new_a.append(a_c2)
+            shared_i += 1
+    h = nn.rmsnorm_apply(params["ln_f"], x)
+    logits = lc.mask_pad_logits(
+        nn.dense_apply(params["head"], h, compute_dtype=lc.cdt(cfg)),
+        cfg.vocab)
+    new_caches = {"mamba": new_m,
+                  "attn": jax.tree.map(lambda *a: jnp.stack(a), *new_a)}
+    return logits[:, 0], new_caches

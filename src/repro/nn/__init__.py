@@ -1,0 +1,13 @@
+from repro.nn.layers import (  # noqa: F401
+    dense_init,
+    dense_apply,
+    embedding_init,
+    rmsnorm_init,
+    rmsnorm_apply,
+    layernorm_init,
+    layernorm_apply,
+    batchnorm_init,
+    batchnorm_apply,
+    swiglu_init,
+    swiglu_apply,
+)

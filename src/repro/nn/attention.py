@@ -1,0 +1,177 @@
+"""Attention library: GQA (qk-norm / bias variants), MLA, cross-attention.
+
+Memory discipline:
+  * prefill uses query-chunked attention (lax.scan over query blocks) so the
+    score matrix never exceeds (B, H, chunk, T) — required for the 32k cells;
+  * decode is a single-query attend over a preallocated KV cache;
+  * MLA decode uses the matrix-absorption trick (scores against the compressed
+    c_kv cache directly) so the cache stays (T, kv_lora + rope_dim).
+
+Shapes: q (B, S, Hq, D), k/v (B, T, Hkv, D); GQA groups G = Hq // Hkv.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def _grouped_scores(q, k):
+    """q (B,S,Hk,G,D), k (B,T,Hk,D) -> scores (B,Hk,G,S,T).
+
+    Standard GQA pairing: query head h uses kv head h // G (kv-major)."""
+    return jnp.einsum("bshgd,bthd->bhgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _grouped_out(w, v):
+    """w (B,Hk,G,S,T), v (B,T,Hk,D) -> (B,S,Hk,G,D)."""
+    return jnp.einsum("bhgst,bthd->bshgd", w.astype(v.dtype), v)
+
+
+def dot_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                  scale: float | None = None):
+    """Unchunked grouped attention. q_offset: absolute pos of q[0] for causal
+    masking against a longer k/v; kv_len: valid cache length (int or array)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = _grouped_scores(qg, k) * scale  # (B,Hk,G,S,T)
+    t = k.shape[1]
+    mask = None
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        valid = jnp.arange(t)[None, :] < jnp.asarray(kv_len).reshape(-1, 1)
+        valid = valid.reshape(b, 1, 1, 1, t)
+        scores = jnp.where(valid, scores, NEG_INF)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(w, v)
+    return out.reshape(b, s, hq, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int = 1024,
+                             scale: float | None = None):
+    """Causal self-attention, scanned over query chunks (bounded memory).
+
+    Falls back to one chunk when S <= chunk. S must be divisible by chunk
+    (model seq lens are powers of two; chunk picked accordingly).
+    """
+    b, s, hq, d = q.shape
+    if s <= chunk:
+        return dot_attention(q, k, v, causal=True, scale=scale)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    qc = q.reshape(b, n, chunk, hq, d).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        i, qi = args
+        off = i * chunk
+        # attend only to keys < off + chunk: slice is dynamic in i, so attend
+        # to the full prefix and mask; memory is (B,G,Hk,chunk,S).
+        oi = dot_attention(qi, k, v, causal=True, q_offset=off, scale=scale)
+        return None, oi
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n), qc))
+    # v's head dim may differ from q's (MLA: dv != dn+dr)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_update_decode(cache, k_new, v_new, *, method: str = "dus"):
+    """Insert one token per sequence at position cache['len'].
+
+    method="dus": per-batch dynamic_update_slice (vmap). Under GSPMD the
+    batch-varying start index defeats partitioning and the cache gets
+    ALL-GATHERED every step (measured: whisper decode_32k moved 7.2 GB of
+    all-gather per token). method="mask": an elementwise where-update that
+    partitions trivially along every axis — pure memory traffic, no
+    collectives (see EXPERIMENTS.md section Perf, whisper_decode H1).
+    """
+    idx = cache["len"]  # (B,)
+
+    if method == "mask":
+        t = cache["k"].shape[1]
+        mask = (jnp.arange(t)[None, :] == idx[:, None])[..., None, None]
+
+        def upd(buf, new):
+            return jnp.where(mask, new.astype(buf.dtype), buf)
+    else:
+        def upd(buf, new):
+            return jax.vmap(
+                lambda bufb, nb, i: jax.lax.dynamic_update_slice_in_dim(
+                    bufb, nb, i, axis=0)
+            )(buf, new, idx)
+
+    return {
+        "k": upd(cache["k"], k_new),
+        "v": upd(cache["v"], v_new),
+        "len": cache["len"] + 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2/V3, MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def mla_prefill_attention(q_nope, q_rope, k_nope, k_rope, v, *, chunk=1024):
+    """Expanded-KV MLA prefill. q/k_nope (B,S,H,dn), q/k_rope (B,S,H,dr) with
+    k_rope broadcast from a single shared rope head; v (B,S,H,dv)."""
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    return chunked_causal_attention(q, k, v, chunk=chunk, scale=scale)
+
+
+def mla_absorbed_decode(q_abs, q_rope, c_cache, kr_cache, kv_len, *,
+                        sm_scale):
+    """Matrix-absorbed MLA decode against the compressed cache.
+
+    q_abs:  (B, 1, H, kv_lora)   — q_nope already multiplied by W_uk
+    q_rope: (B, 1, H, dr)
+    c_cache:(B, T, kv_lora), kr_cache: (B, T, dr)
+    Returns attention over the compressed values: (B, 1, H, kv_lora).
+    """
+    s_nope = jnp.einsum("bshc,btc->bhst", q_abs, c_cache,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshr,btr->bhst", q_rope, kr_cache,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * sm_scale
+    t = c_cache.shape[1]
+    valid = (jnp.arange(t)[None, :] < kv_len[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btc->bshc", w.astype(c_cache.dtype), c_cache)
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder, llama-vision gated layers)
+# ---------------------------------------------------------------------------
+
+def cross_attention(q, k, v):
+    """Full (non-causal) attention of q over an encoder context."""
+    return dot_attention(q, k, v, causal=False)

@@ -1,0 +1,158 @@
+"""Minimal module system: pure init/apply functions over param pytrees.
+
+No flax dependency — params are nested dicts of jnp arrays. Sharding is
+attached later by path-based logical-axis rules (distributed/sharding.py),
+so layers here stay framework-free.
+
+Conventions:
+  * dense weights are stored (in_dim, out_dim) and applied as x @ w
+  * param dtype and compute dtype are passed explicitly by the caller
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, dim: int, *, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embedding_lookup(p, ids, *, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def embedding_logits(p, x, *, compute_dtype=jnp.bfloat16):
+    """Tied-head readout: x @ table.T."""
+    return x.astype(compute_dtype) @ p["table"].astype(compute_dtype).T
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def batchnorm_init(dim: int, *, dtype=jnp.float32):
+    """BatchNorm1d as in the paper's MLP (running stats for inference)."""
+    return {
+        "scale": jnp.ones((dim,), dtype),
+        "bias": jnp.zeros((dim,), dtype),
+        "mean": jnp.zeros((dim,), dtype),
+        "var": jnp.ones((dim,), dtype),
+    }
+
+
+def batchnorm_apply(p, x, *, training: bool, momentum: float = 0.9,
+                    eps: float = 1e-5):
+    """Returns (y, new_stats). x: (batch, dim)."""
+    xf = x.astype(jnp.float32)
+    if training:
+        mu = jnp.mean(xf, axis=0)
+        var = jnp.var(xf, axis=0)
+        new = {
+            **p,
+            "mean": momentum * p["mean"] + (1 - momentum) * mu,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var, new = p["mean"], p["var"], p
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU) for float transformer blocks
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, dim: int, hidden: int, *, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, dim, hidden, dtype=dtype),
+        "w_up": dense_init(k2, dim, hidden, dtype=dtype),
+        "w_down": dense_init(k3, hidden, dim, dtype=dtype),
+    }
+
+
+def swiglu_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    g = dense_apply(p["w_gate"], x, compute_dtype=compute_dtype)
+    u = dense_apply(p["w_up"], x, compute_dtype=compute_dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    return dense_apply(p["w_down"], h, compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, *, base: float = 10000.0):
+    return 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, *, base: float = 10000.0):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, base=base)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

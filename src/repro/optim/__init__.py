@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    clip_by_global_norm,
+)
+from repro.optim.bnn import clip_latent_weights  # noqa: F401

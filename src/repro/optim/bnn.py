@@ -1,0 +1,30 @@
+"""BNN-specific optimizer transform: clip latent weights to [-1, 1] after
+each step (Courbariaux et al.; paper §2A — prevents latents growing without
+affecting the binarized weights, which would freeze their gradients)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_latent(path) -> bool:
+    names = [str(getattr(k, "key", k)) for k in path]
+    return any(n == "w_latent" for n in names) or (
+        # MoE binary expert stacks: w_gate/w_up/w_down next to s_mid
+        len(names) >= 2 and names[-1] in ("w_gate", "w_up", "w_down")
+        and "ffn" in names and "shared" not in names and "kind_bin" not in names
+    )
+
+
+def clip_latent_weights(params, *, moe_binary: bool = False):
+    """Clip every binary latent weight tensor to [-1, 1]."""
+    def f(path, p):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if "w_latent" in names:
+            return jnp.clip(p, -1.0, 1.0)
+        if moe_binary and names[-1] in ("w_gate", "w_up", "w_down") \
+                and p.dtype == jnp.float32 and p.ndim == 3:
+            return jnp.clip(p, -1.0, 1.0)
+        return p
+    return jax.tree_util.tree_map_with_path(f, params)

@@ -1,0 +1,121 @@
+"""Mesh-agnostic, atomic, async checkpointing (no orbax dependency).
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json   (tmp dir + atomic rename)
+
+Arrays are saved *unsharded* (fully-addressable host values keyed by pytree
+path), so a checkpoint written under one mesh restores under any other —
+this is the elastic-scaling path: restore() device_puts each leaf with the
+shardings of the *new* mesh.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        a = np.asarray(leaf)
+        # npz cannot round-trip ml_dtypes (bfloat16/fp8): widen to f32;
+        # restore casts back using the dtype of the `like` tree
+        if a.dtype.kind == "V" or str(a.dtype) in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+            a = a.astype(np.float32)
+        out[key] = a
+    return out
+
+
+def _unflatten_like(like, arrays):
+    import jax.numpy as jnp
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        a = np.asarray(arrays[key]).reshape(leaf.shape)
+        if a.dtype != leaf.dtype:
+            a = np.asarray(jnp.asarray(a).astype(leaf.dtype))
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+def save(ckpt_dir: str, step: int, tree, *, meta: dict | None = None,
+         keep_last: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, meta=None, keep_last=3):
+    """Snapshot to host memory synchronously, write in a thread."""
+    arrays = _flatten(tree)                    # device->host copy happens here
+
+    def work():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep_last)
+
+    t = threading.Thread(target=work, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, *, shardings=None):
+    """Restore into the structure of `like`; device_put with `shardings`
+    (a matching pytree of NamedSharding) re-shards for the current mesh —
+    including a mesh of a *different shape* than the one that saved."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    tree = _unflatten_like(like, arrays)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                            shardings)
+    return tree, meta
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)

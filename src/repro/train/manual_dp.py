@@ -1,0 +1,77 @@
+"""Explicit data-parallel gradient sync under shard_map, with 1-bit
+sign-compression + error feedback.
+
+The paper binarizes weights/activations to cut memory and bandwidth; the
+same trick applied to the *interconnect* gives signSGD-style gradient
+all-reduce: communicate sign(g + err) (1 bit/elem on the wire as int8 here,
+packable to u32) plus one f32 scale per tensor, keep the quantization
+residual in an error-feedback buffer so the compression bias vanishes over
+steps. At bf16 baseline this is a 16x collective-byte cut; the dry-run
+roofline quantifies it for the collective-bound cells.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def compress_decompress(g, err):
+    """One tensor: returns (g_hat, new_err). g_hat = scale * sign(g+err)."""
+    c = g.astype(jnp.float32) + err
+    scale = jnp.mean(jnp.abs(c))
+    sgn = jnp.where(c >= 0, 1.0, -1.0)
+    ghat = scale * sgn
+    return ghat, c - ghat
+
+
+def onebit_psum_grads(grads, err, axis_name: str):
+    """Inside shard_map: compress, psum the int8 signs + f32 scales, apply
+    error feedback. Wire format: int8 signs (1 B/elem; packable to 1 bit)
+    + one f32 scale per tensor per device."""
+    def one(g, e):
+        c = g.astype(jnp.float32) + e
+        scale = jnp.mean(jnp.abs(c))
+        sgn = jnp.where(c >= 0, jnp.int8(1), jnp.int8(-1))
+        new_e = c - scale * sgn.astype(jnp.float32)
+        # communicate: signs (int8) + scale (f32 scalar)
+        sgn_sum = jax.lax.psum(sgn.astype(jnp.int8), axis_name)
+        scale_sum = jax.lax.psum(scale, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        g_sync = (scale_sum / n) * sgn_sum.astype(jnp.float32) / n
+        return g_sync, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))
+
+
+def make_onebit_dp_step(loss_fn, update_fn, mesh, *, axis_name="data"):
+    """Builds a shard_map'd DP step: per-device grads -> 1-bit sync ->
+    identical update on every device. Params replicated; batch sharded."""
+
+    def step(params, opt_state, err, batch):
+        def per_device(params, opt_state, err, local_batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, local_batch)
+            grads, err = onebit_psum_grads(grads, err, axis_name)
+            params, opt_state = update_fn(params, grads, opt_state)
+            return params, opt_state, err, metrics
+
+        shmap = jax.shard_map(
+            per_device, mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis_name)),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False)
+        return shmap(params, opt_state, err, batch)
+
+    return step
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,65 @@
+"""Train step factory: value_and_grad + clipping + AdamW + BNN latent clip,
+with optional gradient accumulation (scan over microbatches — XLA overlaps
+the per-microbatch backward with the running reduce-scatter of grads).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (adamw_update, clip_by_global_norm,
+                         clip_latent_weights, cosine_schedule)
+
+
+def make_train_step(api, cfg, *, peak_lr=3e-4, warmup=100, total=10000,
+                    grad_accum: int = 1, max_grad_norm: float = 1.0,
+                    weight_decay: float = 0.1):
+    moe_binary = cfg.family == "moe" and cfg.policy.binary_ffn
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        # microbatch scan: batch leaves are (accum, mb, ...)
+        def micro(carry, mb):
+            acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return acc, (loss, metrics)
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        acc, (losses, metricses) = jax.lax.scan(micro, zero, batch)
+        grads = jax.tree.map(lambda g: g / grad_accum, acc)
+        metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        return losses.mean(), metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(opt_state["step"], peak_lr=peak_lr,
+                             warmup=warmup, total=total)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         weight_decay=weight_decay)
+        params = clip_latent_weights(params, moe_binary=moe_binary)
+        metrics = {**metrics, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(api):
+    def eval_step(params, batch):
+        _, metrics = api.loss(params, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,40 @@
+"""The BEANNA cycle/energy model must reproduce the paper's tables."""
+
+from repro.core import accelerator_model as am
+
+
+def test_peak_throughput_exact():
+    assert abs(am.peak_gops("float") - 52.8) < 1e-9
+    assert abs(am.peak_gops("binary") - 820.8) < 1e-9
+
+
+def test_table1_throughput_within_6pct():
+    m = am.fit()
+    t1 = am.table1(m)
+    for k in ("inf_s_float_b1", "inf_s_float_b256",
+              "inf_s_hybrid_b1", "inf_s_hybrid_b256"):
+        rel = abs(t1[k] / am.PAPER[k] - 1)
+        assert rel < 0.06, (k, t1[k], am.PAPER[k])
+
+
+def test_table2_memory_exact():
+    t2 = am.table2()
+    assert t2["mem_float_bytes"] == am.PAPER["mem_float_bytes"]
+    assert t2["mem_hybrid_bytes"] == am.PAPER["mem_hybrid_bytes"]
+
+
+def test_table3_energy_within_6pct():
+    t3 = am.table3()
+    assert abs(t3["energy_float_b256_mj"] / am.PAPER["energy_float_mj"] - 1) \
+        < 0.06
+    assert abs(t3["energy_hybrid_b256_mj"] / am.PAPER["energy_hybrid_mj"]
+               - 1) < 0.06
+
+
+def test_hybrid_speedup_about_3x():
+    """The paper's headline: ~3x inference speedup for the hybrid net."""
+    m = am.fit()
+    for b in (1, 256):
+        s = m.inferences_per_s(b, hybrid=True) / \
+            m.inferences_per_s(b, hybrid=False)
+        assert 2.5 < s < 3.6, (b, s)

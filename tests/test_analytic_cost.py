@@ -1,0 +1,69 @@
+"""Sanity checks on the analytic roofline cost model."""
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import analytic_cost as AC
+from repro.distributed.hlo_analysis import param_count
+
+
+def test_train_flops_close_to_6nd():
+    """Dense train step analytic flops ~ 6*N*D x remat factor (attention
+    adds the S^2 term on top)."""
+    cfg = get_config("qwen3-8b")
+    shape = SHAPES["train_4k"]
+    sc = AC.step_cost(cfg, shape)
+    n = param_count(cfg)
+    d = shape.global_batch * shape.seq_len
+    base = 6 * n * d / 3.0 * AC.REMAT_FACTOR[cfg.remat]
+    assert 0.8 * base < sc.flops_total < 1.6 * base
+
+
+def test_decode_flops_tiny_vs_train():
+    cfg = get_config("qwen3-8b")
+    tr = AC.step_cost(cfg, SHAPES["train_4k"]).flops_total
+    de = AC.step_cost(cfg, SHAPES["decode_32k"]).flops_total
+    assert de < tr / 100
+
+
+def test_binary_buckets_populated():
+    cfg = get_config("deepseek-v3-671b")  # binary int8 experts
+    sc = AC.step_cost(cfg, SHAPES["train_4k"])
+    assert sc.flops_int8 > 0
+    assert sc.flops_bf16 > 0
+    xn = cfg.replace(policy=cfg.policy.__class__(
+        binary_ffn=True, edge_blocks_float=3, binary_mode="xnor"))
+    sc2 = AC.step_cost(xn, SHAPES["train_4k"])
+    assert sc2.flops_xnor == sc.flops_int8
+
+
+def test_deployed_weight_bytes_modes():
+    cfg = get_config("deepseek-v3-671b")
+    bf = AC.weight_bytes(cfg.replace(policy=cfg.policy.__class__(
+        binary_ffn=False)), deployed=True)
+    i8 = AC.weight_bytes(cfg, deployed=True)          # int8 mode
+    xn = AC.weight_bytes(cfg.replace(policy=cfg.policy.__class__(
+        binary_ffn=True, edge_blocks_float=3, binary_mode="xnor")),
+        deployed=True)
+    assert xn < i8 < bf
+    # the xnor deployment of 671B: 1.34 TB bf16 -> ~180 GB (102 GB of
+    # float attention/shared/edge layers + 77 GB packed experts)
+    assert bf > 1.3e12
+    assert xn < 2.0e11
+
+
+def test_remat_factor_ordering():
+    cfg = get_config("stablelm-3b")
+    sh = SHAPES["train_4k"]
+    f_block = AC.step_cost(cfg.replace(remat="block"), sh).flops_total
+    f_dots = AC.step_cost(cfg.replace(remat="dots"), sh).flops_total
+    f_none = AC.step_cost(cfg.replace(remat="none"), sh).flops_total
+    assert f_none < f_dots < f_block
+
+
+def test_kv_cache_bytes_sub_quadratic_archs_constant():
+    cfg = get_config("rwkv6-3b")
+    b32 = AC.kv_cache_bytes(cfg, SHAPES["decode_32k"])
+    b500 = AC.kv_cache_bytes(cfg, SHAPES["long_500k"])
+    # state is O(1) in seq len; only batch differs (128 vs 1)
+    assert b500 < b32

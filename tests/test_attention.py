@@ -1,0 +1,124 @@
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import attention as A
+from repro.nn.layers import apply_rope
+
+
+def _qkv(b=2, s=64, hq=4, hkv=2, d=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    return q, k, v
+
+
+def _reference_attention(q, k, v, causal=True):
+    """repeat-KV reference."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    k = np.repeat(np.asarray(k), rep, axis=2)
+    v = np.repeat(np.asarray(v), rep, axis=2)
+    q = np.asarray(q)
+    scores = np.einsum("bshd,bthd->bhst", q, k) / math.sqrt(d)
+    if causal:
+        mask = np.tril(np.ones((s, s), bool))
+        scores = np.where(mask[None, None], scores, -1e9)
+    w = np.exp(scores - scores.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    return np.einsum("bhst,bthd->bshd", w, v)
+
+
+def test_gqa_matches_repeat_kv_reference():
+    q, k, v = _qkv()
+    got = A.dot_attention(q, k, v, causal=True)
+    ref = _reference_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_equals_unchunked():
+    q, k, v = _qkv(s=128)
+    full = A.dot_attention(q, k, v, causal=True)
+    chunked = A.chunked_causal_attention(q, k, v, chunk=32)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(chunked, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_with_mla_style_dv_neq_dq():
+    """MLA: value head dim differs from query head dim (sweep regression)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 24))
+    k = jax.random.normal(ks[1], (2, 64, 4, 24))
+    v = jax.random.normal(ks[2], (2, 64, 4, 16))     # dv = 16 != 24
+    full = A.dot_attention(q, k, v, causal=True)
+    chunked = A.chunked_causal_attention(q, k, v, chunk=16)
+    assert chunked.shape == (2, 64, 4, 16)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(chunked, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_last_position():
+    q, k, v = _qkv(s=33)
+    full = A.dot_attention(q, k, v, causal=True)
+    cache = A.init_kv_cache(2, 64, 2, 16, jnp.float32)
+    # fill cache with first 32 k/v
+    cache["k"] = cache["k"].at[:, :32].set(k[:, :32])
+    cache["v"] = cache["v"].at[:, :32].set(v[:, :32])
+    cache["len"] = jnp.full((2,), 32, jnp.int32)
+    cache = A.cache_update_decode(cache, k[:, 32:33], v[:, 32:33])
+    got = A.dot_attention(q[:, 32:33], cache["k"], cache["v"], causal=False,
+                          kv_len=cache["len"])
+    np.testing.assert_allclose(np.asarray(got[:, 0], np.float32),
+                               np.asarray(full[:, 32], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([i]))
+        kj = apply_rope(k, jnp.array([j]))
+        return float(jnp.sum(qi * kj))
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+
+
+def test_mla_absorbed_decode_consistency():
+    """Absorbed-matrix decode == explicit expand-then-attend."""
+    b, t, h, dn, dr, c = 2, 16, 3, 8, 4, 12
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    q_nope = jax.random.normal(ks[0], (b, 1, h, dn))
+    q_rope = jax.random.normal(ks[1], (b, 1, h, dr))
+    c_cache = jax.random.normal(ks[2], (b, t, c))
+    kr_cache = jax.random.normal(ks[3], (b, t, dr))
+    w_uk = jax.random.normal(ks[4], (c, h, dn)) * 0.3
+    kv_len = jnp.full((b,), t, jnp.int32)
+    sm = 1.0 / math.sqrt(dn + dr)
+
+    q_abs = jnp.einsum("bshd,chd->bshc", q_nope, w_uk)
+    ctx = A.mla_absorbed_decode(q_abs, q_rope, c_cache, kr_cache, kv_len,
+                                sm_scale=sm)
+
+    # reference: expand keys, standard attention over concat dims
+    k_nope = jnp.einsum("btc,chd->bthd", c_cache, w_uk)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshr,btr->bhst", q_rope, kr_cache)) * sm
+    w = jax.nn.softmax(scores, -1)
+    ctx_ref = jnp.einsum("bhst,btc->bshc", w, c_cache)
+    np.testing.assert_allclose(np.asarray(ctx, np.float32),
+                               np.asarray(ctx_ref, np.float32),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,39 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.binarize import (binary_dot_packed, binary_matmul_ref,
+                                 hardtanh, pack_bits, sign_ste, unpack_bits)
+
+
+@pytest.mark.parametrize("k", [32, 64, 100, 784, 1024])
+def test_pack_unpack_roundtrip(k):
+    x = jax.random.normal(jax.random.PRNGKey(k), (5, k))
+    r = unpack_bits(pack_bits(x), k)
+    expect = np.where(np.asarray(x) >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(r), expect)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 100, 6), (8, 1024, 16), (3, 33, 5)])
+def test_packed_dot_matches_float_oracle(m, k, n):
+    a = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(2), (n, k))
+    gold = binary_matmul_ref(a, w)
+    got = binary_dot_packed(pack_bits(a), pack_bits(w), k)
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(got))
+
+
+def test_sign_ste_values_and_grad():
+    x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    np.testing.assert_array_equal(np.asarray(sign_ste(x)),
+                                  [-1.0, -1.0, 1.0, 1.0, 1.0])
+    g = jax.grad(lambda x: sign_ste(x).sum())(x)
+    # STE: gradient 1 inside [-1,1], 0 outside
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_hardtanh():
+    x = jnp.array([-3.0, -1.0, 0.3, 1.0, 5.0])
+    np.testing.assert_allclose(np.asarray(hardtanh(x)),
+                               [-1.0, -1.0, 0.3, 1.0, 1.0], rtol=1e-6)

@@ -1,0 +1,50 @@
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as C
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (4, 8)),
+        "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                   "c": jnp.ones((3,), jnp.bfloat16)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    C.save(str(tmp_path), 7, tree, meta={"data_state": {"step": 3}})
+    assert C.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+    got, meta = C.restore(str(tmp_path), 7, like)
+    assert meta["step"] == 7 and meta["data_state"]["step"] == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert got["nested"]["c"].dtype == jnp.bfloat16
+
+
+def test_keep_last_gc(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        C.save(str(tmp_path), s, _tree(s), keep_last=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [4, 5]
+
+
+def test_async_save(tmp_path):
+    t = C.save_async(str(tmp_path), 11, _tree())
+    t.join(timeout=30)
+    assert C.latest_step(str(tmp_path)) == 11
+    got, meta = C.restore(str(tmp_path), 11, _tree())
+    assert meta["step"] == 11
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    C.save(str(tmp_path), 1, _tree())
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]

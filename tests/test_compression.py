@@ -1,0 +1,56 @@
+"""1-bit gradient compression with error feedback (the paper's binary idea
+applied to the interconnect)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.manual_dp import (compress_decompress, init_error_feedback,
+                                   make_onebit_dp_step)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Accumulated compressed estimates converge to the true sum: error
+    feedback makes the quantization bias vanish."""
+    g = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64,)),
+                    jnp.float32) * 0.1
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for t in range(200):
+        ghat, err = compress_decompress(g, err)
+        acc = acc + ghat
+    rel = float(jnp.linalg.norm(acc / 200 - g) / jnp.linalg.norm(g))
+    assert rel < 0.05, rel
+
+
+def test_onebit_dp_step_trains():
+    """shard_map'd 1-bit DP step minimizes a quadratic (1-device mesh —
+    the collective path itself is exercised in test_sharding_mini)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    target = jnp.arange(8, dtype=jnp.float32)
+
+    def loss_fn(params, batch):
+        loss = jnp.mean((params["w"] - target) ** 2)
+        return loss, {"loss": loss}
+
+    def update(params, grads, opt):
+        return jax.tree.map(lambda p, g: p - 0.2 * g, params, grads), opt
+
+    step = make_onebit_dp_step(loss_fn, update, mesh)
+    params = {"w": jnp.zeros(8)}
+    err = init_error_feedback(params)
+    opt = {}
+    batch = jnp.zeros((1, 1))
+    with jax.set_mesh(mesh):
+        for _ in range(300):
+            params, opt, err, metrics = step(params, opt, err, batch)
+    assert float(jnp.abs(params["w"] - target).max()) < 0.2
+
+
+def test_compression_wire_format_is_int8():
+    """The communicated sign tensor is int8 (1 B/elem, 4x less than f32;
+    packable to 1 bit on a real ring)."""
+    c = jnp.array([0.5, -0.2, 0.0])
+    sgn = jnp.where(c >= 0, jnp.int8(1), jnp.int8(-1))
+    assert sgn.dtype == jnp.int8

@@ -1,0 +1,72 @@
+"""Regression guard: the assigned architectures carry EXACTLY the published
+hyperparameters, and every (arch x shape) cell is classified correctly."""
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, cell_is_runnable
+
+EXPECT = {
+    "minicpm3-4b": dict(n_layers=62, d_model=2560, n_heads=40, d_ff=6400,
+                        vocab=73448, use_mla=True),
+    "qwen3-8b": dict(n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+                     d_ff=12288, vocab=151936, qk_norm=True),
+    "qwen2-72b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                      d_ff=29568, vocab=152064, qkv_bias=True),
+    "stablelm-3b": dict(n_layers=32, d_model=2560, n_heads=32,
+                        n_kv_heads=32, d_ff=6912, vocab=50304),
+    "whisper-base": dict(n_layers=6, enc_layers=6, d_model=512, n_heads=8,
+                         d_ff=2048, vocab=51865),
+    "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab=128256),
+    "deepseek-v2-236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                             vocab=102400, n_experts=160, top_k=6,
+                             moe_d_ff=1536, n_shared_experts=2,
+                             kv_lora_rank=512),
+    "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128,
+                             vocab=129280, n_experts=256, top_k=8,
+                             moe_d_ff=2048, n_shared_experts=1,
+                             use_mtp=True, router_type="sigmoid"),
+    "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32, d_ff=10240,
+                        vocab=32000, d_state=64),
+    "rwkv6-3b": dict(n_layers=32, d_model=2560, n_heads=40, d_ff=8960,
+                     vocab=65536),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_published_hyperparams(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECT[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_cell_classification():
+    n_run, n_skip = 0, 0
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            ok, reason = cell_is_runnable(cfg, s)
+            n_run += ok
+            n_skip += not ok
+            if not ok:
+                assert s.name == "long_500k" and not cfg.sub_quadratic()
+    assert n_run == 32 and n_skip == 8  # 40 cells total
+    # SSM archs DO run long_500k
+    for a in ("zamba2-2.7b", "rwkv6-3b"):
+        ok, _ = cell_is_runnable(get_config(a), SHAPES["long_500k"])
+        assert ok
+
+
+def test_param_counts_match_published_scale():
+    from repro.distributed.hlo_analysis import param_count
+    # sanity: totals within ~25% of the models' nameplate sizes
+    expect = {"qwen3-8b": 8e9, "qwen2-72b": 72e9, "deepseek-v2-236b": 236e9,
+              "deepseek-v3-671b": 671e9, "minicpm3-4b": 4e9,
+              "zamba2-2.7b": 2.7e9, "rwkv6-3b": 3e9, "stablelm-3b": 3e9}
+    for arch, n in expect.items():
+        got = param_count(get_config(arch))
+        assert 0.6 * n < got < 1.45 * n, (arch, got, n)
+    # MoE active < total
+    cfg = get_config("deepseek-v3-671b")
+    active = param_count(cfg, active_only=True)
+    assert active < 0.1 * param_count(cfg)

@@ -1,0 +1,62 @@
+"""The paper's MNIST experiment (protocol reproduction on synthetic data)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid_mlp as H
+from repro.data.synthetic import SyntheticMnist
+
+
+def test_table2_memory_exact():
+    """Weight memory matches paper Table II to the byte."""
+    assert H.weight_memory_bytes(hybrid=False) == 5_820_416
+    assert H.weight_memory_bytes(hybrid=True) == 1_888_256
+
+
+@pytest.mark.parametrize("hybrid", [False, True])
+def test_mlp_forward_shapes(hybrid):
+    params = H.mlp_init(jax.random.PRNGKey(0), hybrid=hybrid)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 784))
+    logits, new = H.mlp_apply(params, x, training=True)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("hybrid", [False, True])
+def test_mlp_short_training_improves(hybrid):
+    """A few hundred SGD steps beat chance by a wide margin (the full
+    float-vs-hybrid gap experiment lives in benchmarks/fig2_training.py)."""
+    data = SyntheticMnist(n_train=2048, n_test=512, seed=0)
+    params = H.mlp_init(jax.random.PRNGKey(0), hybrid=hybrid)
+
+    @jax.jit
+    def step(params, x, y):
+        (loss, (new, _)), grads = jax.value_and_grad(
+            H.mlp_loss, has_aux=True)(params, (x, y))
+        lr = 0.05
+        upd = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        # keep BN running stats from the fwd pass; clip binary latents
+        upd = jax.tree_util.tree_map_with_path(
+            lambda path, p: jnp.clip(p, -1, 1)
+            if any(str(getattr(k, "key", k)) == "w_latent" for k in path)
+            else p, upd)
+        for k in new:
+            if k.startswith("bn"):
+                upd[k]["mean"] = new[k]["mean"]
+                upd[k]["var"] = new[k]["var"]
+        return upd, loss
+
+    for epoch in range(2):
+        for x, y in data.batches("train", 128, seed=epoch):
+            params, loss = step(params, jnp.asarray(x), jnp.asarray(y))
+    xt, yt = data.test
+    acc = float(H.mlp_accuracy(params, jnp.asarray(xt), jnp.asarray(yt)))
+    assert acc > 0.6, acc  # 10 classes, chance = 0.1
+
+
+def test_hybrid_latents_bounded():
+    params = H.mlp_init(jax.random.PRNGKey(0), hybrid=True)
+    w = params["fc1"]["bin"]["w_latent"]
+    assert float(jnp.abs(w).max()) <= 1.0

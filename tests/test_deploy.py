@@ -1,0 +1,50 @@
+"""Deployed (packed/int8) params must produce the SAME forward values as
+training latents — sign() is deterministic, so quantization is exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model
+from repro.models.deploy import deploy_params
+
+
+@pytest.mark.parametrize("arch,mode", [
+    ("qwen3-8b", "int8"), ("qwen3-8b", "xnor"),
+    ("deepseek-v3-671b", "int8"), ("deepseek-v2-236b", "xnor"),
+    ("zamba2-2.7b", "int8"), ("rwkv6-3b", "xnor"),
+])
+def test_deployed_equals_latent_forward(arch, mode):
+    cfg = smoke_config(arch)
+    cfg = cfg.replace(policy=cfg.policy.__class__(
+        binary_ffn=True, edge_blocks_float=1, binary_mode=mode),
+        capacity_factor=16.0)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    dparams = deploy_params(params, cfg)
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    gold, _ = api.prefill(params, {"tokens": toks}, max_len=20)
+    got, _ = api.prefill(dparams, {"tokens": toks}, max_len=20)
+    np.testing.assert_allclose(np.asarray(gold, np.float32),
+                               np.asarray(got, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_deployed_drops_latents_and_shrinks():
+    cfg = smoke_config("qwen3-8b")
+    cfg = cfg.replace(policy=cfg.policy.__class__(
+        binary_ffn=True, edge_blocks_float=1, binary_mode="xnor"))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    dparams = deploy_params(params, cfg)
+    paths = {"/".join(str(getattr(k, "key", k)) for k in p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(dparams)[0]}
+    assert not any("w_latent" in p for p in paths)
+    assert any("w_packed" in p for p in paths)
+
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+    assert nbytes(dparams) < nbytes(params)

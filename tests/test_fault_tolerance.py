@@ -1,0 +1,60 @@
+import time
+
+import pytest
+
+from repro.train.fault_tolerance import (DrainSignal, StragglerWatchdog,
+                                         TrainSupervisor, run_with_retries)
+
+
+def test_retry_recovers_from_transient():
+    calls = []
+
+    def fn(x):
+        calls.append(1)
+        return x + 1
+
+    out = run_with_retries(fn, 1, max_retries=3, backoff=0.0,
+                           fail_at=lambda a: a < 2)
+    assert out == 2
+    assert len(calls) == 1  # two injected failures, then success
+
+
+def test_retry_exhaustion_raises():
+    with pytest.raises(RuntimeError):
+        run_with_retries(lambda: 1, max_retries=2, backoff=0.0,
+                         fail_at=lambda a: True)
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(k_sigma=3.0, warmup_steps=3)
+    for _ in range(20):
+        w.observe(1.0 + 0.001 * _)
+    assert w.straggler_steps == 0
+    assert w.observe(10.0)  # a 10x step is a straggler
+    assert w.straggler_steps == 1
+
+
+def test_supervisor_retries_and_checkpoints():
+    ckpts = []
+
+    def step(params, opt, batch):
+        return params + 1, opt, {"loss": float(params)}
+
+    sup = TrainSupervisor(step, checkpoint_fn=lambda st, i:
+                          ckpts.append((i, st[0])), max_retries=2)
+    batches = iter(range(100))
+    # inject a transient failure at step 3, attempt 0
+    (params, opt), hist = sup.run(
+        (0, 0), batches, n_steps=6, ckpt_every=2,
+        fail_at=lambda i, a: i == 3 and a == 0)
+    assert params == 6
+    assert len(hist) == 6
+    assert [i for i, _ in ckpts] == [2, 4, 6]
+
+
+def test_drain_stops_loop():
+    sup = TrainSupervisor(lambda p, o, b: (p + 1, o, {"loss": 0.0}),
+                          checkpoint_fn=lambda st, i: None)
+    sup.drain.draining = True
+    (params, _), hist = sup.run((0, 0), iter(range(10)), n_steps=10)
+    assert params == 0 and hist == []

@@ -1,0 +1,78 @@
+"""Per-kernel correctness: sweep shapes, assert against the ref.py oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.binarize import pack_bits, pack_signs_int8
+from repro.kernels import ref as kref
+from repro.kernels.bf16_matmul import bf16_matmul_pallas
+from repro.kernels.binary_matmul import binary_matmul_pallas
+from repro.kernels.hybrid_dense import hybrid_dense_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+
+SHAPES = [(128, 256, 128), (256, 1024, 512), (64, 512, 256)]
+
+
+def _data(m, k, n, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (n, k))
+    return a, w
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_binary_matmul_kernel(m, k, n):
+    a, w = _data(m, k, n)
+    pa, pw = pack_bits(a), pack_bits(w)
+    gold = kref.binary_matmul_packed_ref(pa, pw, k)
+    got = binary_matmul_pallas(pa, pw, k=k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(got))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 2), (128, 128, 4)])
+def test_binary_matmul_kernel_block_shapes(bm, bn, bk):
+    m, k, n = 128, 512, 128
+    a, w = _data(m, k, n, seed=3)
+    pa, pw = pack_bits(a), pack_bits(w)
+    gold = kref.binary_matmul_packed_ref(pa, pw, k)
+    got = binary_matmul_pallas(pa, pw, k=k, bm=bm, bn=bn, bk=bk,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(got))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_int8_matmul_kernel(m, k, n):
+    a, w = _data(m, k, n, seed=1)
+    ai8 = pack_signs_int8(a)
+    pw = pack_bits(w)
+    gold = kref.binary_matmul_packed_ref(pack_bits(a), pw, k)
+    got = int8_matmul_pallas(ai8, pw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(got))
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 512, 256), (256, 1024, 1024)])
+def test_hybrid_dense_fused_kernel(m, k, n):
+    a, w = _data(m, k, n, seed=2)
+    pa, pw = pack_bits(a), pack_bits(w)
+    scale = jax.random.normal(jax.random.PRNGKey(5), (n,)) * 0.1 + 0.5
+    shift = jax.random.normal(jax.random.PRNGKey(6), (n,)) * 0.1
+    gold = kref.hybrid_dense_ref(pa, pw, scale, shift, k)
+    got = hybrid_dense_pallas(pa, pw, scale, shift, k=k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(got))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("hardtanh", [False, True])
+def test_bf16_matmul_kernel(m, k, n, hardtanh):
+    a, w = _data(m, k, n, seed=4)
+    w = w.T  # (k, n) layout
+    gold = kref.bf16_matmul_ref(a.astype(jnp.bfloat16),
+                                w.astype(jnp.bfloat16))
+    if hardtanh:
+        gold = jnp.clip(gold, -1.0, 1.0)
+    got = bf16_matmul_pallas(a, w, hardtanh=hardtanh, interpret=True)
+    np.testing.assert_allclose(np.asarray(gold, np.float32),
+                               np.asarray(got), rtol=2e-2, atol=2e-2)

@@ -1,0 +1,53 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         clip_latent_weights, cosine_schedule)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt = adamw_update(params, grads, opt, lr=0.05,
+                                   weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert int(opt["step"]) == 200
+
+
+def test_cosine_schedule():
+    lr0 = float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100))
+    lrp = float(cosine_schedule(10, peak_lr=1.0, warmup=10, total=100))
+    lre = float(cosine_schedule(99, peak_lr=1.0, warmup=10, total=100))
+    assert lr0 < 0.2
+    assert abs(lrp - 1.0) < 0.1
+    assert lre < 0.2 and lre >= 0.1 * 0.99  # floor
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 20.0) < 1e-4
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-4)
+
+
+def test_clip_latent_weights():
+    params = {"ffn": {"bin_in": {"w_latent": jnp.array([2.0, -3.0, 0.5])}},
+              "other": {"w": jnp.array([5.0])}}
+    out = clip_latent_weights(params)
+    np.testing.assert_array_equal(
+        np.asarray(out["ffn"]["bin_in"]["w_latent"]), [1.0, -1.0, 0.5])
+    assert float(out["other"]["w"][0]) == 5.0  # untouched
+
+
+def test_bf16_moments():
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    opt = adamw_init(params, moment_dtype=jnp.bfloat16)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((8,), jnp.bfloat16)}
+    p2, opt2 = adamw_update(params, grads, opt, lr=0.1)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(p2["w"], np.float32)).all()

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binarize import (binary_matmul_ref, pack_bits, unpack_bits)
+from repro.distributed.hlo_analysis import (_array_bytes, collective_bytes,
+                                            collective_bytes_while_aware)
+from repro.kernels import ops
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 6), st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_pack_roundtrip_property(rows, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, k))
+    r = unpack_bits(pack_bits(x), k)
+    expect = np.where(np.asarray(x) >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(r), expect)
+
+
+@given(st.integers(1, 8), st.integers(1, 96), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_binary_dense_impl_agreement(m, k, n, seed):
+    """All three lowerings produce identical integer results."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (m, k))
+    w = jax.random.uniform(k2, (k, n), minval=-1, maxval=1)
+    gold = binary_matmul_ref(x, w.T)
+    for impl in ("xla_xnor", "xla_int8", "bf16"):
+        y = ops.binary_dense(x, w, impl=impl)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(gold),
+                                      err_msg=impl)
+
+
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_binary_dot_bounded_by_k(m, k, n, seed):
+    """|dot of +-1 vectors| <= K and parity matches K."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (k, n))
+    y = np.asarray(ops.binary_dense(x, w))
+    assert np.abs(y).max() <= k
+    assert ((y.astype(np.int64) - k) % 2 == 0).all()
+
+
+@given(st.integers(1, 4), st.integers(2, 50), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_ste_grad_zero_outside_clip(m, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, 3)) * 2.0
+    g = jax.grad(lambda w: ops.binary_dense(x, w).sum())(w)
+    outside = np.abs(np.asarray(w)) > 1.0
+    assert (np.asarray(g)[outside] == 0).all()
+
+
+def test_hlo_array_bytes_parser():
+    assert _array_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _array_bytes("bf16[2,3]") == 12
+    assert _array_bytes("(f32[4], s8[16])") == 16 + 16
+    assert _array_bytes("pred[]") == 1
+
+
+def test_collective_parser_on_synthetic_hlo():
+    txt = """
+HloModule m
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = tuple(...)
+}
+
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %gte = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %ag = f32[128]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[64] get-tuple-element(%w), index=1
+}
+"""
+    flat = collective_bytes(txt)
+    # one all-gather (512 B) + one all-reduce (256 B x2 ring factor)
+    assert flat["all-gather"]["bytes"] == 128 * 4
+    assert flat["all-reduce"]["bytes"] == 64 * 4 * 2
+    aware = collective_bytes_while_aware(txt)
+    assert aware == 128 * 4 + 10 * (64 * 4 * 2)
+
+
+@given(st.integers(2, 64), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_softmax_xent_matches_manual(v, seed):
+    from repro.models.lm_common import softmax_xent
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, 5, v))
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (3, 5), 0, v)
+    got = softmax_xent(logits, labels, z_loss=0.0)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    want = -np.take_along_axis(np.asarray(lp),
+                               np.asarray(labels)[..., None], -1).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
