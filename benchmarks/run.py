@@ -8,19 +8,20 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="long versions (more epochs, bigger shapes)")
     ap.add_argument("--only", default="",
-                    help="comma list: tables,fig2,kernels,roofline")
+                    help="comma list: tables,fig2,kernels,roofline,serve")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import beanna_tables, fig2_training, kernel_bench, \
-        roofline
+        roofline, serve_bench
 
     suites = [
         ("tables", beanna_tables.run),
         ("kernels", kernel_bench.run),
         ("fig2", fig2_training.run),
         ("roofline", roofline.run),
+        ("serve", serve_bench.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

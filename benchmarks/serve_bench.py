@@ -1,0 +1,101 @@
+"""Serving throughput: continuous-batching slot engine vs the seed
+run-to-completion bucket engine on the same mixed-length workload.
+
+The workload is a Poisson arrival stream (arrival unit = one decode step)
+of requests with mixed prompt lengths and mixed max_new. The bucket engine
+gets the *easier* job — every request enqueued up front — and still loses:
+it only batches exact-equal prompt lengths, runs each group until its
+slowest member finishes, and recompiles decode for every distinct group
+size. The slot engine decodes the full fixed pool every step and swaps
+finished requests for queued ones between steps.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py
+    PYTHONPATH=src python benchmarks/serve_bench.py --requests 32 --max-batch 8
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import get_model
+from repro.serving import BucketEngine, ServeEngine
+from repro.serving.scheduler import poisson_workload
+
+
+def bench_bucket(api, params, workload, *, max_batch, max_len):
+    eng = BucketEngine(api, params, max_batch=max_batch, max_len=max_len)
+    for _, prompt, max_new in workload:           # best case: all up front
+        eng.add_request(prompt, max_new=max_new)
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(v) for v in results.values())
+    return results, toks, dt, None
+
+
+def bench_slot(api, params, workload, *, max_batch, max_len):
+    eng = ServeEngine(api, params, max_batch=max_batch, max_len=max_len)
+    pending = sorted(workload, key=lambda w: w[0])
+    t0 = time.time()
+    while pending or eng.queue or any(s is not None for s in eng.slots):
+        while pending and pending[0][0] <= eng.step_count:
+            _, prompt, max_new = pending.pop(0)
+            eng.add_request(prompt, max_new=max_new)
+        if not eng.step() and pending:
+            # idle until the next arrival
+            eng.step_count = max(eng.step_count + 1, pending[0][0])
+    dt = time.time() - t0
+    toks = sum(len(v) for v in eng.results.values())
+    return eng.results, toks, dt, eng
+
+
+def run(quick: bool = True, *, requests: int | None = None,
+        max_batch: int | None = None, rate: float = 1.0, seed: int = 0):
+    requests = requests if requests is not None else (24 if quick else 64)
+    max_batch = max_batch if max_batch is not None else (4 if quick else 8)
+    cfg = smoke_config("stablelm-3b")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    max_len = 64
+    workload = poisson_workload(
+        requests, rate=rate, prompt_lens=(5, 8, 12, 16), max_new=(4, 16),
+        vocab=cfg.vocab, seed=seed)
+
+    _, btoks, bdt, _ = bench_bucket(api, params, workload,
+                                    max_batch=max_batch, max_len=max_len)
+    _, stoks, sdt, eng = bench_slot(api, params, workload,
+                                    max_batch=max_batch, max_len=max_len)
+    assert btoks == stoks, (btoks, stoks)
+    rows = [
+        ("serve/bucket_tok_s", bdt / btoks * 1e6, f"{btoks / bdt:.1f} tok/s"),
+        ("serve/slot_tok_s", sdt / stoks * 1e6, f"{stoks / sdt:.1f} tok/s"),
+        ("serve/slot_util", 0.0, f"{eng.utilization() * 100:.1f}%"),
+        ("serve/speedup", 0.0, f"{bdt / sdt:.2f}x"),
+    ]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrivals per decode step")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for n, us, derived in run(requests=args.requests,
+                              max_batch=args.max_batch, rate=args.rate,
+                              seed=args.seed):
+        print(f"{n},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

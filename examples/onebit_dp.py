@@ -33,8 +33,8 @@ from repro.train.manual_dp import (init_error_feedback,
 def main():
     cfg = smoke_config("stablelm-3b").replace(remat="none")
     api = get_model(cfg)
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh, set_mesh
+    mesh = make_mesh((4,), ("data",))
 
     def loss_fn(params, batch):
         return api.loss(params, batch)
@@ -54,10 +54,11 @@ def main():
                 grads)
             params, opt = sgd(params, grads, opt)
             return params, opt, err, m
-        return jax.shard_map(per_device, mesh=mesh,
-                             in_specs=(P(), P(), P(), P("data")),
-                             out_specs=(P(), P(), P(), P()),
-                             check_vma=False)(params, opt, err, batch)
+        from repro.launch.mesh import shard_map
+        return shard_map(per_device, mesh=mesh,
+                         in_specs=(P(), P(), P(), P("data")),
+                         out_specs=(P(), P(), P(), P()))(
+            params, opt, err, batch)
 
     onebit_step = make_onebit_dp_step(loss_fn, sgd, mesh)
 
@@ -74,7 +75,7 @@ def main():
         opt = {}
         data_it = SyntheticTokens(cfg.vocab, 32, 8, seed=0, noise=0.02)
         losses = []
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             for i in range(40):
                 b = next(data_it)
                 b = {k: jnp.asarray(v) for k, v in b.items()}

@@ -1,4 +1,7 @@
-"""Serve a small LM with batched requests through the slot engine.
+"""Serve a small LM through the continuous-batching slot engine.
+
+Mixed-length requests arrive while decode is running; finished requests are
+evicted and queued ones prefilled into the freed slots between decode steps.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,7 +17,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import get_model
-from repro.serving.engine import ServeEngine
+from repro.serving import ServeEngine
 
 
 def main():
@@ -24,15 +27,23 @@ def main():
     eng = ServeEngine(api, params, max_batch=8, max_len=128,
                       temperature=0.0)
     rng = np.random.default_rng(0)
-    for i in range(12):
-        plen = int(rng.choice([8, 8, 16]))       # mixed-length buckets
+    for i in range(8):                            # initial wave
+        plen = int(rng.choice([5, 8, 16]))        # mixed lengths
         eng.add_request(rng.integers(0, cfg.vocab, plen), max_new=12)
     t0 = time.time()
+    for _ in range(4):                            # late arrivals mid-decode
+        eng.step()
+    for i in range(4):
+        plen = int(rng.choice([5, 8, 16]))
+        eng.add_request(rng.integers(0, cfg.vocab, plen), max_new=12)
     results = eng.run()
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
     print(f"served {len(results)} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, CPU)")
+    print(f"slot utilization {eng.utilization() * 100:.1f}% "
+          f"over {eng.stats['decode_steps']} decode steps "
+          f"({eng.stats['evictions']} evictions)")
     for rid in sorted(results)[:3]:
         print(f"  req {rid}: {results[rid]}")
 

@@ -25,7 +25,7 @@ from repro.configs import ARCHS, SHAPES, get_config, cell_is_runnable
 from repro.distributed import hlo_analysis
 from repro.distributed.sharding import set_logical_rules
 from repro.launch import specs as S
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.models import get_model
 from repro.train.step import make_train_step
 
@@ -57,7 +57,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     p_abs, p_sh = S.param_shardings(api, mesh, mesh_rules,
                                     deployed=deployed)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             o_abs, o_sh = S.opt_shardings(api, cfg, p_abs, p_sh, mesh)
             b_abs, b_sh = S.batch_specs_and_shardings(cfg, shape, mesh,

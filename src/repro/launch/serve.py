@@ -1,8 +1,8 @@
 """Serving launcher: loads (or inits) a model and runs a batch of requests
-through the slot-based engine.
+through the continuous-batching slot engine (or the legacy bucket engine).
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
-      --requests 8 --prompt-len 16 --max-new 16
+      --requests 8 --prompt-lens 8,12,16 --max-new 16
 """
 
 from __future__ import annotations
@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.models import get_model
-from repro.serving.engine import ServeEngine
+from repro.serving import BucketEngine, ServeEngine
 from repro.train import checkpoint as C
 
 log = logging.getLogger("repro.serve")
@@ -27,8 +27,10 @@ def main(argv=None):
     ap.add_argument("--arch", choices=ARCHS, default="stablelm-3b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--engine", choices=["slot", "bucket"], default="slot")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-lens", default="16",
+                    help="comma list; each request draws one uniformly")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -36,6 +38,9 @@ def main(argv=None):
     logging.basicConfig(level=logging.INFO)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family in ("whisper", "vlm"):
+        ap.error(f"--arch {args.arch}: {cfg.family} needs audio/image "
+                 "inputs; this text-only launcher cannot serve it")
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     if args.ckpt_dir:
@@ -45,12 +50,19 @@ def main(argv=None):
             params = state["params"]
             log.info("loaded checkpoint step %d", last)
 
-    eng = ServeEngine(api, params, max_batch=args.max_batch,
-                      max_len=args.prompt_len + args.max_new + 8,
-                      temperature=args.temperature)
+    plens = [int(x) for x in args.prompt_lens.split(",")]
+    max_len = max(plens) + args.max_new + 8
+    cls = ServeEngine if args.engine == "slot" else BucketEngine
+    if cls is ServeEngine and api.cache_insert is None:
+        log.warning("family %r has no slot-indexed cache insert; "
+                    "falling back to the bucket engine", cfg.family)
+        cls = BucketEngine
+    eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
+              temperature=args.temperature)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, args.prompt_len)
+        plen = int(rng.choice(plens))
+        prompt = rng.integers(0, cfg.vocab, plen)
         eng.add_request(prompt, max_new=args.max_new)
     t0 = time.time()
     results = eng.run()
@@ -58,6 +70,9 @@ def main(argv=None):
     toks = sum(len(v) for v in results.values())
     log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
              len(results), toks, dt, toks / dt)
+    if isinstance(eng, ServeEngine):
+        log.info("slot utilization %.1f%%, stats %s",
+                 eng.utilization() * 100, eng.stats)
     for rid in sorted(results)[:4]:
         log.info("request %d -> %s", rid, results[rid])
     return results

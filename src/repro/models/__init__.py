@@ -6,6 +6,8 @@
     logits, caches = api.prefill(params, batch)      # full-sequence -> decode caches
     caches = api.init_cache(batch_size, max_len)     # empty caches for pure decode
     logits, caches = api.decode(params, caches, tokens)
+    caches = api.cache_insert(pool, new, slots)  # slot-indexed scatter
+                                                 # (families with KV pools)
 """
 
 from __future__ import annotations
@@ -23,6 +25,10 @@ class ModelApi(NamedTuple):
     decode: Callable
     init_cache: Callable
     param_rules: list
+    # slot-indexed cache scatter (pool, new, slots) -> pool, for the
+    # continuous-batching serving engine; None when the family's cache
+    # layout doesn't support partial-batch insertion yet.
+    cache_insert: Callable | None = None
 
     def init_deployed(self, key):
         """Deploy-time params: binary latents -> packed/int8 weights."""
@@ -47,6 +53,7 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             decode=lambda p, c, tok: t.lm_decode(p, cfg, c, tok),
             init_cache=lambda bs, ml: t.lm_init_cache(cfg, bs, ml),
             param_rules=t.PARAM_RULES,
+            cache_insert=t.lm_cache_insert,
         )
     if cfg.family == "vlm":
         from repro.models import llama_vision as v

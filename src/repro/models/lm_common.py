@@ -473,6 +473,40 @@ def segments_decode(params, x, cfg: ModelConfig, caches):
     return x, new_caches
 
 
+def set_cache_lengths(caches, seq_lens):
+    """Override per-sequence cache lengths after a right-padded prefill.
+
+    Prefill over a (B, Lb) bucket-padded batch writes K/V for the pad
+    positions too and stamps ``len = Lb``. Resetting ``len`` to the true
+    prompt lengths makes those pad entries invisible (every attention read
+    masks positions >= len) and makes the next decode token overwrite
+    position ``seq_lens`` — so a padded prefill is bit-identical to an
+    unpadded one from the first decode step on.
+    """
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    out = {}
+    for name, seg in caches.items():
+        seg = dict(seg)
+        seg["len"] = jnp.broadcast_to(seq_lens[None, :], seg["len"].shape)
+        out[name] = seg
+    return out
+
+
+def cache_insert_slots(pool, new, slots):
+    """Scatter per-request prefill caches into decode-pool slots.
+
+    pool leaves are (layers, max_batch, ...) and new leaves (layers, G, ...)
+    with identical trailing dims (prefill must be called with the pool's
+    max_len). slots (G,) int32 gives the destination batch row per request;
+    out-of-range entries (>= max_batch) are dropped, which lets callers pad
+    a prefill group to a fixed size without a spare slot to aim at.
+    """
+    return jax.tree.map(
+        lambda dst, src: dst.at[:, slots].set(src.astype(dst.dtype),
+                                              mode="drop"),
+        pool, new)
+
+
 def init_segment_caches(cfg: ModelConfig, batch: int, max_len: int,
                         dtype=jnp.bfloat16):
     segs = build_segments(cfg)

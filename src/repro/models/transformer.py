@@ -112,15 +112,29 @@ def lm_loss(params, cfg: ModelConfig, batch):
     return loss, metrics
 
 
-def lm_prefill(params, cfg: ModelConfig, tokens, *, max_len=None):
-    """Full-sequence forward; returns (last-token logits, decode caches)."""
+def lm_prefill(params, cfg: ModelConfig, tokens, *, max_len=None,
+               seq_lens=None):
+    """Full-sequence forward; returns (last-token logits, decode caches).
+
+    seq_lens (B,) marks the true per-sequence length of a right-padded
+    batch: logits are gathered at position seq_lens-1 and cache lengths are
+    reset so pad positions are masked out of every later attention read.
+    Causality already keeps real tokens from seeing the trailing pads, so a
+    bucket-padded prefill matches an exact-length one bit for bit.
+    """
     s = tokens.shape[1]
     max_len = max_len or s
     positions = jnp.arange(s)
     x = _embed(params, cfg, tokens)
     h, caches = lc.segments_prefill(params["blocks"], x, cfg,
                                     positions=positions, max_len=max_len)
-    logits = _logits(params, cfg, h[:, -1:, :])
+    if seq_lens is None:
+        h_last = h[:, -1:, :]
+    else:
+        seq_lens = jnp.asarray(seq_lens, jnp.int32)
+        h_last = h[jnp.arange(h.shape[0]), seq_lens - 1][:, None, :]
+        caches = lc.set_cache_lengths(caches, seq_lens)
+    logits = _logits(params, cfg, h_last)
     return logits[:, 0], caches
 
 
@@ -135,3 +149,8 @@ def lm_decode(params, cfg: ModelConfig, caches, tokens):
 def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return lc.init_segment_caches(cfg, batch, max_len,
                                   dtype=lc.cdt(cfg))
+
+
+def lm_cache_insert(pool, new, slots):
+    """Slot-indexed cache insert for the continuous-batching engine."""
+    return lc.cache_insert_slots(pool, new, slots)

@@ -1,1 +1,2 @@
+from repro.serving.bucket import BucketEngine  # noqa: F401
 from repro.serving.engine import ServeEngine  # noqa: F401

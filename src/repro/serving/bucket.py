@@ -1,0 +1,97 @@
+"""Seed run-to-completion bucket engine (kept as the serving baseline).
+
+Requests are grouped by *exact* prompt length, each group is prefetched and
+decoded to completion before the next group is admitted. Slots that finish
+early idle until the whole group drains, and no new work joins mid-decode —
+`benchmarks/serve_bench.py` measures exactly this cost against the
+continuous-batching slot engine in `repro.serving.engine`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BucketEngine:
+    def __init__(self, api, params, *, max_batch: int = 8,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.api, self.params = api, params
+        self.max_batch, self.max_len = max_batch, max_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self.queue: list[Request] = []
+        self.results: dict[int, list[int]] = {}
+        self._decode = jax.jit(api.decode)
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, b, max_len=max_len))
+
+    def add_request(self, prompt, max_new: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            raise ValueError("prompt must contain at least one token")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_len ({self.max_len})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new))
+        return rid
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(
+            k, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def run(self) -> dict[int, list[int]]:
+        """Process the queue to completion; returns rid -> generated ids
+        (cumulative over the engine's lifetime, matching ServeEngine.run)."""
+        results = self.results
+        while self.queue:
+            # bucket by prompt length, take up to max_batch
+            self.queue.sort(key=lambda r: len(r.prompt))
+            plen = len(self.queue[0].prompt)
+            group = [r for r in self.queue if len(r.prompt) == plen]
+            group = group[:self.max_batch]
+            for r in group:
+                self.queue.remove(r)
+            toks = np.stack([r.prompt for r in group])
+            batch = {"tokens": jnp.asarray(toks)}
+            logits, caches = self._prefill(self.params, batch)
+            nxt = self._sample(logits)
+            for i, r in enumerate(group):
+                r.out.append(int(nxt[i]))
+            active = list(group)
+            steps = max(r.max_new for r in group) - 1
+            for _ in range(max(steps, 0)):
+                logits, caches = self._decode(self.params, caches,
+                                              nxt[:, None])
+                nxt = self._sample(logits)
+                for i, r in enumerate(active):
+                    if not r.done:
+                        r.out.append(int(nxt[i]))
+                        if len(r.out) >= r.max_new:
+                            r.done = True
+                if all(r.done for r in active):
+                    break
+            for r in group:
+                results[r.rid] = r.out
+        return dict(results)

@@ -1,45 +1,86 @@
-"""Slot-based batched serving engine: batched prefill (per prompt-length
-bucket) + a jitted decode loop over active slots with greedy/temperature
-sampling. Requests join/leave the decode batch as they finish (continuous
-batching at step granularity)."""
+"""Continuous-batching slot engine.
+
+A fixed pool of ``max_batch`` decode slots, each backed by a preallocated
+per-slot KV cache of ``max_len``. The decode step is a single jitted call
+over the *whole* pool every tick — its shape never changes, so it compiles
+exactly once — and requests flow through three states:
+
+  queued -> admitted (prefill into a free slot) -> evicted (max_new reached)
+
+Admission happens *between decode steps*: finished requests free their slot
+at the end of a tick and the scheduler immediately prefills queued work into
+the gaps, so slots never idle while the queue is non-empty. Prefill batches
+are padded to power-of-two length buckets and group sizes (bounding compile
+variants to O(#buckets * log max_batch)); ``seq_lens`` makes the padded
+prefill bit-identical to an exact-length one (see models/transformer.py),
+so greedy outputs match the run-to-completion BucketEngine exactly.
+
+Free slots still ride through the decode step — their rows are computed and
+ignored. That is the BEANNA trade expressed at the serving layer: a fixed
+systolic-array-shaped batch with full occupancy beats perfectly-sized but
+ragged launches, because the hot loop never recompiles and eviction /
+admission cost only a cache scatter.
+"""
 
 from __future__ import annotations
-
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (S,) int32
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
+from repro.serving.scheduler import (FifoScheduler, Request, bucket_len,
+                                     make_buckets, pad_group)
 
 
 class ServeEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0,
+                 min_bucket: int = 8):
+        if api.cache_insert is None:
+            raise ValueError(
+                f"model family {api.cfg.family!r} has no slot-indexed cache "
+                "insert; use repro.serving.bucket.BucketEngine instead")
         self.api, self.params = api, params
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature
         self.rng = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self.queue: list[Request] = []
-        self._decode = jax.jit(api.decode)
+        self.results: dict[int, list[int]] = {}
+        self.buckets = make_buckets(max_len, min_bucket=min_bucket)
+        self.sched = FifoScheduler(self.buckets)
+        # slot table: per-slot request (None = free), next token to feed
+        self.slots: list[Request | None] = [None] * max_batch
+        self.next_tok = np.zeros((max_batch, 1), np.int32)
+        self.caches = api.init_cache(max_batch, max_len)
+        # public virtual clock (decode steps elapsed): callers scheduling
+        # arrivals by step may also fast-forward it across idle gaps, as
+        # benchmarks/serve_bench.py does
+        self.step_count = 0
+        self.stats = {"decode_steps": 0, "occupied_slot_steps": 0,
+                      "prefills": 0, "admitted": 0, "evictions": 0}
+        # the pool cache is donated: step/admit immediately rebind
+        # self.caches, so XLA can update the (layers, B, T, ...) buffers in
+        # place instead of copying the whole pool every tick
+        self._decode = jax.jit(api.decode, donate_argnums=1)
         self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, b, max_len=max_len))
+            lambda p, toks, sl: api.prefill(p, {"tokens": toks},
+                                            max_len=max_len, seq_lens=sl))
+        self._insert = jax.jit(api.cache_insert, donate_argnums=0)
 
     def add_request(self, prompt, max_new: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            raise ValueError("prompt must contain at least one token")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_len ({self.max_len})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new))
+        self.queue.append(Request(rid, prompt, max_new))
         return rid
 
     def _sample(self, logits):
@@ -49,36 +90,81 @@ class ServeEngine:
         return jax.random.categorical(
             k, logits / self.temperature, axis=-1).astype(jnp.int32)
 
-    def run(self) -> dict[int, list[int]]:
-        """Process the queue to completion; returns rid -> generated ids."""
-        results = {}
-        while self.queue:
-            # bucket by prompt length, take up to max_batch
-            self.queue.sort(key=lambda r: len(r.prompt))
-            plen = len(self.queue[0].prompt)
-            group = [r for r in self.queue if len(r.prompt) == plen]
-            group = group[:self.max_batch]
+    # -- slot lifecycle -----------------------------------------------------
+
+    def _finish(self, slot: int):
+        r = self.slots[slot]
+        self.results[r.rid] = r.out
+        self.slots[slot] = None
+        self.stats["evictions"] += 1
+
+    def _admit(self):
+        """Prefill queued requests into free slots (one group per bucket)."""
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        while free and self.queue:
+            group = self.sched.select(self.queue, len(free))
+            if not group:
+                break
             for r in group:
                 self.queue.remove(r)
-            toks = np.stack([r.prompt for r in group])
-            batch = {"tokens": jnp.asarray(toks)}
-            logits, caches = self._prefill(self.params, batch)
-            nxt = self._sample(logits)
-            for i, r in enumerate(group):
-                r.out.append(int(nxt[i]))
-            active = list(group)
-            steps = max(r.max_new for r in group) - 1
-            for _ in range(max(steps, 0)):
-                logits, caches = self._decode(self.params, caches,
-                                              nxt[:, None])
-                nxt = self._sample(logits)
-                for i, r in enumerate(active):
-                    if not r.done:
-                        r.out.append(int(nxt[i]))
-                        if len(r.out) >= r.max_new:
-                            r.done = True
-                if all(r.done for r in active):
-                    break
-            for r in group:
-                results[r.rid] = r.out
-        return results
+            blen = bucket_len(max(len(r.prompt) for r in group), self.buckets)
+            gp = pad_group(len(group))
+            toks = np.zeros((gp, blen), np.int32)
+            lens = np.ones((gp,), np.int32)      # dummy rows: 1-token prompt
+            for j, r in enumerate(group):
+                toks[j, :len(r.prompt)] = r.prompt
+                lens[j] = len(r.prompt)
+            logits, new = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lens))
+            nxt = np.asarray(self._sample(logits))
+            # dummy rows aim past the pool and are dropped by the scatter
+            idx = np.full((gp,), self.max_batch, np.int32)
+            idx[:len(group)] = free[:len(group)]
+            self.caches = self._insert(self.caches, new, jnp.asarray(idx))
+            self.stats["prefills"] += 1
+            for j, r in enumerate(group):
+                slot = int(idx[j])
+                self.slots[slot] = r
+                r.out.append(int(nxt[j]))
+                self.next_tok[slot, 0] = nxt[j]
+                self.stats["admitted"] += 1
+                if len(r.out) >= r.max_new:
+                    self._finish(slot)
+            free = [i for i, r in enumerate(self.slots) if r is None]
+
+    # -- engine ticks -------------------------------------------------------
+
+    def step(self) -> bool:
+        """One tick: admit into free slots, then one batched decode step over
+        the full pool. Returns False once no slot is occupied (idle)."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return False
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           jnp.asarray(self.next_tok))
+        nxt = np.asarray(self._sample(logits))
+        self.step_count += 1
+        self.stats["decode_steps"] += 1
+        self.stats["occupied_slot_steps"] += len(active)
+        for i in active:
+            r = self.slots[i]
+            r.out.append(int(nxt[i]))
+            self.next_tok[i, 0] = nxt[i]
+            if len(r.out) >= r.max_new:
+                self._finish(i)
+        return True
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain queue and slots; returns rid -> generated ids (cumulative
+        over the engine's lifetime, so arrivals between run() calls work)."""
+        while self.step():
+            pass
+        return dict(self.results)
+
+    def utilization(self) -> float:
+        """Mean fraction of occupied slots per decode step."""
+        steps = self.stats["decode_steps"]
+        if steps == 0:
+            return 0.0
+        return self.stats["occupied_slot_steps"] / (steps * self.max_batch)

@@ -1,0 +1,97 @@
+"""Scheduling primitives for the continuous-batching slot engine.
+
+Three pieces, kept separate from the engine's JAX plumbing so the policy is
+testable in pure Python:
+
+  * length buckets — queued prompts are padded up to a small set of bucket
+    lengths so prefill compiles once per (bucket, group-size) pair instead of
+    once per distinct prompt length;
+  * ``FifoScheduler`` — the admission policy: serve the oldest queued request
+    first, and batch it with every other queued request that shares its
+    length bucket, up to the number of free slots;
+  * ``poisson_workload`` — a reproducible mixed-length Poisson arrival
+    stream for benchmarks and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request; slot occupancy lives in the engine's slot table."""
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+def make_buckets(max_len: int, *, min_bucket: int = 8) -> tuple[int, ...]:
+    """Powers of two from min_bucket up, capped at max_len (always included)."""
+    buckets = []
+    b = min_bucket
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
+
+
+def bucket_len(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket >= n (prompts are validated against max at admission)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
+
+
+def pad_group(n: int) -> int:
+    """Round a prefill group size up to a power of two so the prefill kernel
+    compiles for O(log max_batch) group sizes instead of one per size."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class FifoScheduler:
+    """FIFO admission with same-bucket batching.
+
+    ``select`` never reorders across the queue head: the group is always
+    anchored on the oldest waiting request, so no request can be starved by
+    a stream of easier-to-batch arrivals.
+    """
+
+    def __init__(self, buckets: tuple[int, ...]):
+        self.buckets = buckets
+
+    def select(self, queue: list[Request], n_free: int) -> list[Request]:
+        """Pick up to n_free requests sharing the queue head's bucket."""
+        if not queue or n_free <= 0:
+            return []
+        head_bucket = bucket_len(len(queue[0].prompt), self.buckets)
+        group = [r for r in queue
+                 if bucket_len(len(r.prompt), self.buckets) == head_bucket]
+        return group[:n_free]
+
+
+def poisson_workload(n: int, *, rate: float, prompt_lens=(8, 12, 16),
+                     max_new=(4, 16), vocab: int = 256, seed: int = 0):
+    """n requests with exponential inter-arrival gaps (arrival unit = one
+    decode step), mixed prompt lengths, and uniform max_new draws.
+
+    Returns [(arrival_step, prompt, max_new)] sorted by arrival.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.choice(prompt_lens))
+        prompt = rng.integers(0, vocab, plen).astype(np.int32)
+        mn = int(rng.integers(max_new[0], max_new[1] + 1))
+        out.append((int(t), prompt, mn))
+    return out

@@ -4,7 +4,9 @@ applied to the interconnect)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.train.manual_dp import (compress_decompress, init_error_feedback,
                                    make_onebit_dp_step)
 
@@ -23,11 +25,11 @@ def test_error_feedback_unbiased_over_steps():
     assert rel < 0.05, rel
 
 
+@pytest.mark.slow  # 300 shard_map steps on CPU (~5 min)
 def test_onebit_dp_step_trains():
     """shard_map'd 1-bit DP step minimizes a quadratic (1-device mesh —
     the collective path itself is exercised in test_sharding_mini)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     target = jnp.arange(8, dtype=jnp.float32)
 
     def loss_fn(params, batch):
@@ -42,7 +44,7 @@ def test_onebit_dp_step_trains():
     err = init_error_feedback(params)
     opt = {}
     batch = jnp.zeros((1, 1))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for _ in range(300):
             params, opt, err, metrics = step(params, opt, err, batch)
     assert float(jnp.abs(params["w"] - target).max()) < 0.2

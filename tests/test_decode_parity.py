@@ -10,6 +10,8 @@ import pytest
 from repro.configs import ARCHS, smoke_config
 from repro.models import get_model
 
+pytestmark = pytest.mark.slow  # full-arch sweep; CI fast lane skips it
+
 B, S = 2, 32
 
 

@@ -11,6 +11,8 @@ from repro.models import get_model
 from repro.optim import adamw_init
 from repro.train.step import make_train_step
 
+pytestmark = pytest.mark.slow  # full-arch sweep; CI fast lane skips it
+
 B, S = 2, 32
 
 

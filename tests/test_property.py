@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.binarize import (binary_matmul_ref, pack_bits, unpack_bits)
 from repro.distributed.hlo_analysis import (_array_bytes, collective_bytes,

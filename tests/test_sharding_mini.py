@@ -23,7 +23,7 @@ SCRIPT = textwrap.dedent("""
     from repro.configs.base import ShapeSpec
     from repro.distributed.sharding import set_logical_rules, partition_specs
     from repro.launch import specs as S
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, set_mesh
     from repro.models import get_model
     from repro.optim import adamw_init
     from repro.train.step import make_train_step
@@ -41,7 +41,7 @@ SCRIPT = textwrap.dedent("""
     o_abs, o_sh = S.opt_shardings(api, cfg, p_abs, p_sh, mesh)
     b_abs, b_sh = S.batch_specs_and_shardings(cfg, shape, mesh, rules)
     step = make_train_step(api, cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         f = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                     out_shardings=(p_sh, o_sh, None))
         compiled = f.lower(p_abs, o_abs, b_abs).compile()
@@ -87,7 +87,7 @@ SCRIPT = textwrap.dedent("""
     set_logical_rules(mesh, rules3)
     c_abs, c_sh = S.cache_specs_and_shardings(api, cfg, dshape, mesh, rules3)
     t_abs, t_sh = S.decode_token_specs(cfg, dshape, mesh, rules3)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g = jax.jit(lambda p, c, t: api.decode(p, c, t),
                     in_shardings=(p_sh, c_sh, t_sh))
         g.lower(p_abs, c_abs, t_abs).compile()

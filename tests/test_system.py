@@ -5,6 +5,7 @@ coherent greedy continuations."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import smoke_config
 from repro.data.synthetic import SyntheticTokens
@@ -14,6 +15,8 @@ from repro.models import get_model
 from repro.optim import adamw_init
 from repro.serving.engine import ServeEngine
 from repro.train.step import make_train_step
+
+pytestmark = pytest.mark.slow  # 60-step training loop; CI fast lane skips it
 
 
 def test_lm_training_loss_decreases():

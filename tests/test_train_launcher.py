@@ -30,7 +30,7 @@ def test_train_checkpoint_resume(tmp_path):
 
 def test_serve_launcher_smoke():
     out = serve_cli.main(["--arch", "stablelm-3b", "--smoke",
-                          "--requests", "3", "--prompt-len", "8",
+                          "--requests", "3", "--prompt-lens", "8,12",
                           "--max-new", "4"])
     assert len(out) == 3
     assert all(len(v) == 4 for v in out.values())
