@@ -63,11 +63,10 @@ def make_onebit_dp_step(loss_fn, update_fn, mesh, *, axis_name="data"):
             params, opt_state = update_fn(params, grads, opt_state)
             return params, opt_state, err, metrics
 
-        shmap = jax.shard_map(
-            per_device, mesh=mesh,
-            in_specs=(P(), P(), P(), P(axis_name)),
-            out_specs=(P(), P(), P(), P()),
-            check_vma=False)
+        from repro.launch.mesh import shard_map
+        shmap = shard_map(per_device, mesh=mesh,
+                          in_specs=(P(), P(), P(), P(axis_name)),
+                          out_specs=(P(), P(), P(), P()))
         return shmap(params, opt_state, err, batch)
 
     return step
