@@ -1,0 +1,140 @@
+"""Attention backend benchmark: blockwise online-softmax vs the score-
+materializing reference, on the two serving hot paths.
+
+  prefill   causal self-attention at S in {1k, 4k, 16k} (quick drops 16k):
+            xla_ref scans query chunks but still materializes a
+            (B, Hkv, G, chunk, S) score tile per step; xla_blockwise never
+            holds more than one (q_block, kv_block) tile.
+  decode    one step over a full slot pool (max_batch sequences x a
+            preallocated max_len cache), the ServeEngine tick shape.
+
+Reports tok/s and an analytic peak-score-memory estimate per backend (the
+resident score tile — the term the blockwise formulation shrinks from
+O(chunk * S) to O(block^2)).
+
+    PYTHONPATH=src python benchmarks/attn_bench.py            # incl. 16k
+    PYTHONPATH=src python benchmarks/attn_bench.py --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, ".."))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import time_fn as _time_fn
+from repro.nn import attention as attn_lib
+
+# smoke-model-ish geometry, but with real GQA grouping
+HQ, HKV, D = 8, 2, 64
+CHUNK = 1024          # xla_ref query-chunk / blockwise block edge
+DTYPE = jnp.bfloat16
+
+
+def _score_bytes(impl: str, b: int, s: int, t: int) -> int:
+    """Peak resident f32 score-tile bytes (the attention-specific term)."""
+    g = HQ // HKV
+    if impl == "xla_ref":
+        return b * HKV * g * min(s, CHUNK) * t * 4
+    if impl == "xla_blockwise":
+        return b * HKV * g * min(s, CHUNK) * min(t, CHUNK) * 4
+    if impl == "pallas_flash":
+        return 128 * 128 * 4  # one (bq, bk) tile per core
+    raise ValueError(impl)
+
+
+def _fmt_bytes(n: int) -> str:
+    return f"{n / 2**20:.1f}MiB" if n < 2**30 else f"{n / 2**30:.2f}GiB"
+
+
+def _qkv(b, s, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, HQ, D), DTYPE)
+    k = jax.random.normal(ks[1], (b, s, HKV, D), DTYPE)
+    v = jax.random.normal(ks[2], (b, s, HKV, D), DTYPE)
+    return q, k, v
+
+
+def bench_prefill(seqs, impls):
+    rows = []
+    for s in seqs:
+        q, k, v = _qkv(1, s)
+        base = None
+        for impl in impls:
+            fn = jax.jit(functools.partial(
+                attn_lib.prefill_attention, chunk=CHUNK, impl=impl))
+            iters = 1 if s >= 16384 else 3
+            try:
+                dt = _time_fn(fn, q, k, v, iters=iters, warmup=1)
+            except Exception as e:  # noqa: BLE001 (interpret OOM etc.)
+                rows.append((f"attn/prefill_{s}_{impl}", 0.0,
+                             f"ERROR {type(e).__name__}"))
+                continue
+            toks = s / dt
+            if impl == impls[0]:
+                base, rel = dt, ""
+            elif base is None:
+                rel = " baseline_failed"
+            else:
+                rel = f" {base / dt:.2f}x_vs_{impls[0]}"
+            rows.append((f"attn/prefill_{s}_{impl}", dt * 1e6,
+                         f"{toks:.0f} tok/s scores~"
+                         f"{_fmt_bytes(_score_bytes(impl, 1, s, s))}{rel}"))
+    return rows
+
+
+def bench_decode(pool, max_len, impls):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (pool, 1, HQ, D), DTYPE)
+    kc = jax.random.normal(ks[1], (pool, max_len, HKV, D), DTYPE)
+    vc = jax.random.normal(ks[2], (pool, max_len, HKV, D), DTYPE)
+    # mixed fill levels, as a slot pool mid-stream
+    kv_len = jnp.arange(1, pool + 1, dtype=jnp.int32) * (max_len // pool)
+    rows = []
+    for impl in impls:
+        fn = jax.jit(functools.partial(attn_lib.decode_attention,
+                                       impl=impl))
+        try:
+            dt = _time_fn(fn, q, kc, vc, kv_len=kv_len, iters=3, warmup=1)
+        except Exception as e:  # noqa: BLE001 — keep other impls' rows
+            rows.append((f"attn/decode_pool{pool}x{max_len}_{impl}", 0.0,
+                         f"ERROR {type(e).__name__}"))
+            continue
+        rows.append((f"attn/decode_pool{pool}x{max_len}_{impl}", dt * 1e6,
+                     f"{pool / dt:.0f} tok/s scores~"
+                     f"{_fmt_bytes(_score_bytes(impl, pool, 1, max_len))}"))
+    return rows
+
+
+def run(quick: bool = True):
+    seqs = (1024, 4096) if quick else (1024, 4096, 16384)
+    # pallas interpret mode is a correctness harness, not a perf target:
+    # time it only on a real accelerator
+    impls = ["xla_ref", "xla_blockwise"]
+    if jax.default_backend() != "cpu":
+        impls.append("pallas_flash")
+    rows = bench_prefill(seqs, impls)
+    pool, max_len = (16, 1024) if quick else (64, 4096)
+    rows += bench_decode(pool, max_len, impls)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for n, us, derived in run(quick=args.quick):
+        print(f"{n},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

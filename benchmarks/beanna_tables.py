@@ -11,24 +11,17 @@ Table III(energy): model power x modeled inference time.
 
 from __future__ import annotations
 
-import time
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import time_fn
 from repro.core import accelerator_model as am
 from repro.core import hybrid_mlp as H
 
-
-def _time_fn(f, *args, iters=20, warmup=3):
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+_time_fn = functools.partial(time_fn, iters=20, warmup=3)
 
 
 def measured_inference(batch: int, mode: str = "int8"):

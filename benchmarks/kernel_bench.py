@@ -5,24 +5,13 @@ ratios, which are host-independent."""
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import time_fn as _time_fn
 from repro.core.binarize import pack_bits, pack_signs_int8
 from repro.kernels import ops, ref as kref
-
-
-def _time_fn(f, *args, iters=10, warmup=2):
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def run(quick: bool = True):

@@ -8,17 +8,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="long versions (more epochs, bigger shapes)")
     ap.add_argument("--only", default="",
-                    help="comma list: tables,fig2,kernels,roofline,serve")
+                    help="comma list: tables,fig2,kernels,attn,roofline,"
+                         "serve")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import beanna_tables, fig2_training, kernel_bench, \
-        roofline, serve_bench
+    from benchmarks import attn_bench, beanna_tables, fig2_training, \
+        kernel_bench, roofline, serve_bench
 
     suites = [
         ("tables", beanna_tables.run),
         ("kernels", kernel_bench.run),
+        ("attn", attn_bench.run),
         ("fig2", fig2_training.run),
         ("roofline", roofline.run),
         ("serve", serve_bench.run),

@@ -1,0 +1,20 @@
+"""Shared wall-clock timing helper for the benchmark suites."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(f, *args, iters=10, warmup=2, **kw):
+    """Mean seconds per call after jit warmup (block_until_ready both on
+    warmup calls and on the last timed call, so async dispatch can't leak
+    work past the clock)."""
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters

@@ -90,7 +90,11 @@ class ModelConfig:
     fsdp: bool = False
     scan_layers: bool = True
     attn_chunk: int = 1024
-    cache_update: str = "dus"         # dus | mask (see attention.py)
+    # attention backend: auto | xla_ref | xla_blockwise | pallas_flash
+    # (resolved per call by nn/attention.resolve_attn_impl)
+    attn_impl: str = "auto"
+    cache_update: str = "auto"        # auto | dus | mask (see attention.py;
+    #                                   auto -> mask under a sharded mesh)
     shard_kv_heads: bool = True       # False: replicate wk/wv over model
     serve_cache_sharding: str = "explicit"  # explicit | auto (GSPMD picks)
     serve_mesh: str = ""              # e.g. "32x8": recarve pod for serving

@@ -145,6 +145,13 @@ def set_logical_rules(mesh, mesh_rules: MeshRules):
     _ACTIVE_RULES, _ACTIVE_MESH = mesh_rules, mesh
 
 
+def active_mesh():
+    """The mesh activated by set_logical_rules, or None (single-device
+    tests). Policy code (e.g. attention.resolve_cache_update) keys off
+    this to pick GSPMD-friendly lowerings automatically."""
+    return _ACTIVE_MESH
+
+
 def with_logical_constraint(x, axes):
     """Constrain activation sharding by logical axis names (no-op when no
     rules are active, e.g. in single-device tests)."""

@@ -49,7 +49,10 @@ def _variants_qwen3_train():
 
 
 def _variants_whisper_decode():
-    cfg = get_config("whisper-base")
+    # every variant pins "dus": the default is now "auto" (-> mask under
+    # the dry-run mesh), which would both collapse the H1 A/B and confound
+    # H2-H4 with a second changed knob
+    cfg = get_config("whisper-base").replace(cache_update="dus")
     return "whisper-base", "decode_32k", [
         ("base", cfg),
         # H1 (REFUTED): mask-update instead of dynamic_update_slice — the
@@ -73,7 +76,8 @@ def _variants_whisper_decode():
 
 
 def _variants_dsv3_decode():
-    cfg = get_config("deepseek-v3-671b")
+    # cache_update pinned for all variants — see the whisper pair
+    cfg = get_config("deepseek-v3-671b").replace(cache_update="dus")
     return "deepseek-v3-671b", "decode_32k", [
         ("base", cfg),
         # H1 (REFUTED): the compressed-MLA cache write was not the cost

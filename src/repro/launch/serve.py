@@ -34,6 +34,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "xla_ref", "xla_blockwise",
+                             "pallas_flash"],
+                    help="attention backend override (see nn/attention.py)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -58,7 +62,7 @@ def main(argv=None):
                     "falling back to the bucket engine", cfg.family)
         cls = BucketEngine
     eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
-              temperature=args.temperature)
+              temperature=args.temperature, attn_impl=args.attn_impl)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.choice(plens))

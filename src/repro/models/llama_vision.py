@@ -71,7 +71,7 @@ def _cross_apply(p, x, cfg, patches):
                        compute_dtype=lc.cdt(cfg)).reshape(b, s,
                                                           cfg.n_heads, dh)
     k, v = _patch_kv(p["xattn"], patches, cfg)
-    o = attn_lib.dot_attention(q, k, v, causal=False)
+    o = attn_lib.cross_attention(q, k, v, impl=cfg.attn_impl)
     a = nn.dense_apply(p["xattn"]["wo"], o.reshape(b, s, -1),
                        compute_dtype=lc.cdt(cfg))
     x = x + jnp.tanh(p["gate_attn"]) * a.astype(jnp.float32)

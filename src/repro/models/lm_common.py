@@ -128,7 +128,8 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions):
     q, k, v = gqa_qkv(p, x, cfg, positions)
     q = wlc(q, ("batch", "seq", "heads", "kv"))
     k = wlc(k, ("batch", "seq", "heads", "kv"))
-    o = attn_lib.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+    o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
+                                   impl=cfg.attn_impl)
     o = o.reshape(*x.shape[:2], -1)
     return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg))
 
@@ -139,8 +140,8 @@ def gqa_decode(p, x, cfg: ModelConfig, cache):
     q, k, v = gqa_qkv(p, x, cfg, positions)
     cache = attn_lib.cache_update_decode(cache, k, v,
                                          method=cfg.cache_update)
-    o = attn_lib.dot_attention(q, cache["k"], cache["v"], causal=False,
-                               kv_len=cache["len"])
+    o = attn_lib.decode_attention(q, cache["k"], cache["v"],
+                                  kv_len=cache["len"], impl=cfg.attn_impl)
     o = o.reshape(*x.shape[:2], -1)
     return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
 
@@ -207,7 +208,8 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions):
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
                                 (*k_rope.shape[:2], h, k_rope.shape[-1]))
     o = attn_lib.mla_prefill_attention(q_nope, q_rope, k_nope, k_rope_b, v,
-                                       chunk=cfg.attn_chunk)  # (B,S,H,dv)
+                                       chunk=cfg.attn_chunk,
+                                       impl=cfg.attn_impl)  # (B,S,H,dv)
     o = o.reshape(b, s, -1)
     return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg))
 
@@ -222,7 +224,7 @@ def mla_decode(p, x, cfg: ModelConfig, cache):
     # append to compressed cache (same GSPMD scatter concern as the KV
     # cache: mask method partitions trivially; see attention.py)
     idx = cache["len"]
-    if cfg.cache_update == "mask":
+    if attn_lib.resolve_cache_update(cfg.cache_update) == "mask":
         t = cache["c"].shape[1]
         m = (jnp.arange(t)[None, :] == idx[:, None])[..., None]
         cache = {
@@ -328,8 +330,13 @@ def _pad_time(a, max_len):
 
 
 def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
-                  max_len):
-    """Full-sequence forward that also emits this block's decode cache."""
+                  max_len, seq_lens=None):
+    """Full-sequence forward that also emits this block's decode cache.
+
+    seq_lens (B,) masks keys past each sequence's true length in a right-
+    padded batch. Real rows are bit-identical either way (causality already
+    hides trailing pads from them); passing it keeps the pad rows' scores
+    from wandering and exercises the kernels' kv_len path."""
     b, s, _ = x.shape
     h = nn.rmsnorm_apply(p["ln1"], x)
     if sig.attn == "mla":
@@ -343,7 +350,9 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
         kr_b = jnp.broadcast_to(k_rope[:, :, None, :],
                                 (b, s, hh, k_rope.shape[-1]))
         o = attn_lib.mla_prefill_attention(q_nope, q_rope, k_nope, kr_b, v,
-                                           chunk=cfg.attn_chunk)
+                                           chunk=cfg.attn_chunk,
+                                           kv_len=seq_lens,
+                                           impl=cfg.attn_impl)
         a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
                            compute_dtype=cdt(cfg))
         cache = {"c": _pad_time(c_kv, max_len),
@@ -351,7 +360,8 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
                  "len": jnp.full((b,), s, jnp.int32)}
     else:
         q, k, v = gqa_qkv(p["attn"], h, cfg, positions)
-        o = attn_lib.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+        o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
+                                       kv_len=seq_lens, impl=cfg.attn_impl)
         a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
                            compute_dtype=cdt(cfg))
         cache = {"k": _pad_time(k, max_len), "v": _pad_time(v, max_len),
@@ -366,7 +376,8 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
     return x + f, cache
 
 
-def segments_prefill(params, x, cfg: ModelConfig, *, positions, max_len):
+def segments_prefill(params, x, cfg: ModelConfig, *, positions, max_len,
+                     seq_lens=None):
     segs = build_segments(cfg)
     caches = {}
     for si, (sig, start, count) in enumerate(segs):
@@ -374,7 +385,7 @@ def segments_prefill(params, x, cfg: ModelConfig, *, positions, max_len):
 
         def one(x, p, sig=sig):
             return block_prefill(p, x, cfg, sig, positions=positions,
-                                 max_len=max_len)
+                                 max_len=max_len, seq_lens=seq_lens)
 
         if cfg.scan_layers and count > 1:
             x, cache = jax.lax.scan(one, x, stacked)

@@ -126,12 +126,14 @@ def lm_prefill(params, cfg: ModelConfig, tokens, *, max_len=None,
     max_len = max_len or s
     positions = jnp.arange(s)
     x = _embed(params, cfg, tokens)
+    if seq_lens is not None:
+        seq_lens = jnp.asarray(seq_lens, jnp.int32)
     h, caches = lc.segments_prefill(params["blocks"], x, cfg,
-                                    positions=positions, max_len=max_len)
+                                    positions=positions, max_len=max_len,
+                                    seq_lens=seq_lens)
     if seq_lens is None:
         h_last = h[:, -1:, :]
     else:
-        seq_lens = jnp.asarray(seq_lens, jnp.int32)
         h_last = h[jnp.arange(h.shape[0]), seq_lens - 1][:, None, :]
         caches = lc.set_cache_lengths(caches, seq_lens)
     logits = _logits(params, cfg, h_last)

@@ -105,7 +105,7 @@ def _encode(params, cfg, frames):
         h = nn.layernorm_apply(p["ln1"], x)
         q, k, v = lc.gqa_qkv(p["attn"], h, cfg,
                              jnp.arange(x.shape[1]))
-        o = attn_lib.dot_attention(q, k, v, causal=False)
+        o = attn_lib.cross_attention(q, k, v, impl=cfg.attn_impl)
         x = x + nn.dense_apply(p["attn"]["wo"],
                                o.reshape(*x.shape[:2], -1),
                                compute_dtype=lc.cdt(cfg))
@@ -131,7 +131,7 @@ def _xattn(p, x, k, v, cfg):
     q = nn.dense_apply(p["wq"], x,
                        compute_dtype=lc.cdt(cfg)).reshape(b, s,
                                                           cfg.n_heads, dh)
-    o = attn_lib.dot_attention(q, k, v, causal=False)
+    o = attn_lib.cross_attention(q, k, v, impl=cfg.attn_impl)
     return nn.dense_apply(p["wo"], o.reshape(b, s, -1),
                           compute_dtype=lc.cdt(cfg))
 
@@ -139,7 +139,8 @@ def _xattn(p, x, k, v, cfg):
 def _dec_block(p, x, cfg, enc_kv, positions):
     h = nn.layernorm_apply(p["ln1"], x)
     q, k, v = lc.gqa_qkv(p["attn"], h, cfg, positions)
-    o = attn_lib.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+    o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
+                                   impl=cfg.attn_impl)
     x = x + nn.dense_apply(p["attn"]["wo"], o.reshape(*x.shape[:2], -1),
                            compute_dtype=lc.cdt(cfg))
     h = nn.layernorm_apply(p["ln2"], x)
@@ -185,8 +186,8 @@ def whisper_prefill(params, cfg: ModelConfig, tokens, frames, *,
             b = x.shape[0]
             h = nn.layernorm_apply(p["ln1"], x)
             q, k, v = lc.gqa_qkv(p["attn"], h, cfg, positions)
-            o = attn_lib.chunked_causal_attention(q, k, v,
-                                                  chunk=cfg.attn_chunk)
+            o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
+                                           impl=cfg.attn_impl)
             x2 = x + nn.dense_apply(p["attn"]["wo"],
                                     o.reshape(*x.shape[:2], -1),
                                     compute_dtype=lc.cdt(cfg))
@@ -243,8 +244,9 @@ def whisper_decode(params, cfg: ModelConfig, caches, tokens):
             kv = {"k": c["k"], "v": c["v"], "len": c["len"]}
             kv = attn_lib.cache_update_decode(kv, k, v,
                                               method=cfg.cache_update)
-            o = attn_lib.dot_attention(q, kv["k"], kv["v"], causal=False,
-                                       kv_len=kv["len"])
+            o = attn_lib.decode_attention(q, kv["k"], kv["v"],
+                                          kv_len=kv["len"],
+                                          impl=cfg.attn_impl)
             x2 = x + nn.dense_apply(p["attn"]["wo"],
                                     o.reshape(b, 1, -1),
                                     compute_dtype=lc.cdt(cfg))

@@ -145,7 +145,8 @@ def _shared_prefill(p, x, cfg, positions, max_len):
     h = nn.rmsnorm_apply(p["ln1"], x)
     q, k, v = lc.gqa_qkv(p["attn"], h, cfg, positions)
     from repro.nn import attention as attn_lib
-    o = attn_lib.chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk)
+    o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
+                                   impl=cfg.attn_impl)
     a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
                        compute_dtype=lc.cdt(cfg))
     cache = {"k": lc._pad_time(k, max_len), "v": lc._pad_time(v, max_len),

@@ -1,11 +1,37 @@
-"""Attention library: GQA (qk-norm / bias variants), MLA, cross-attention.
+"""Attention library + backend dispatch: GQA (qk-norm / bias variants),
+MLA, cross-attention, KV caches.
 
-Memory discipline:
-  * prefill uses query-chunked attention (lax.scan over query blocks) so the
-    score matrix never exceeds (B, H, chunk, T) — required for the 32k cells;
-  * decode is a single-query attend over a preallocated KV cache;
-  * MLA decode uses the matrix-absorption trick (scores against the compressed
-    c_kv cache directly) so the cache stays (T, kv_lora + rope_dim).
+This module mirrors ``kernels/ops.py``'s per-layer lowering mux, applied to
+attention: every model calls one of three public entrypoints per shape
+family and the concrete lowering is resolved per call —
+
+  prefill_attention   full-sequence self attention (train / prefill),
+                      causal by default, optional kv_len for right-padded
+                      batches
+  decode_attention    single-query attend over a preallocated KV cache
+                      (kv_len = valid cache length per sequence)
+  cross_attention     non-causal attention over an encoder context
+                      (whisper cross-attn, llama-vision gated blocks,
+                      whisper encoder self-attn)
+
+Backends (``resolve_attn_impl``):
+
+  "xla_ref"        score-materializing reference: unchunked dot_attention,
+                   or a lax.scan over query chunks for long causal prefill
+                   (score tile (B, H, chunk, T))
+  "xla_blockwise"  blockwise online-softmax scan over query x kv blocks
+                   (kernels/flash_attention.blockwise_attention_xla) — the
+                   score matrix never exceeds one (q_block, kv_block) tile
+  "pallas_flash"   the Pallas flash kernel (TPU; interpret=True on CPU)
+  "auto"           xla_ref on CPU (bit-compatible with the historical
+                   path), pallas_flash on accelerators for prefill/cross;
+                   decode always resolves to xla_ref (a single-query
+                   attend is already O(T) with no score blowup)
+
+MLA decode stays on the matrix-absorbed path (scores against the
+compressed c_kv cache) — it never materializes expanded K/V at all, which
+beats any blockwise scheme for that layout; MLA *prefill* (expanded KV)
+routes through prefill_attention like everyone else.
 
 Shapes: q (B, S, Hq, D), k/v (B, T, Hkv, D); GQA groups G = Hq // Hkv.
 """
@@ -20,6 +46,31 @@ import jax.numpy as jnp
 
 NEG_INF = -1e9
 
+ATTN_IMPLS = ("auto", "xla_ref", "xla_blockwise", "pallas_flash")
+
+
+def resolve_attn_impl(impl: str = "auto", *, family: str = "prefill") -> str:
+    """family in {prefill, decode, cross} -> concrete impl for this call.
+
+    Decode is one query against a cache: the scores are already O(T) and
+    the blockwise machinery buys nothing, so auto keeps the reference path.
+    On CPU auto also stays on xla_ref for prefill — it is bit-identical to
+    the pre-flash behaviour (tests and the serving parity suite depend on
+    that); the blockwise paths remain selectable explicitly everywhere.
+    """
+    if impl not in ATTN_IMPLS:
+        raise ValueError(f"unknown attn impl {impl!r}; known: {ATTN_IMPLS}")
+    if impl != "auto":
+        return impl
+    if family == "decode":
+        return "xla_ref"
+    on_cpu = jax.default_backend() == "cpu"
+    return "xla_ref" if on_cpu else "pallas_flash"
+
+
+# ---------------------------------------------------------------------------
+# xla_ref internals (score-materializing; kept as the oracle)
+# ---------------------------------------------------------------------------
 
 def _grouped_scores(q, k):
     """q (B,S,Hk,G,D), k (B,T,Hk,D) -> scores (B,Hk,G,S,T).
@@ -36,8 +87,10 @@ def _grouped_out(w, v):
 
 def dot_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
                   scale: float | None = None):
-    """Unchunked grouped attention. q_offset: absolute pos of q[0] for causal
-    masking against a longer k/v; kv_len: valid cache length (int or array)."""
+    """Unchunked grouped attention (internal reference; models should call
+    the dispatch entrypoints). q_offset: absolute pos of q[0] for causal
+    masking against a longer k/v; kv_len: valid cache length (int or
+    array)."""
     b, s, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
@@ -51,8 +104,9 @@ def dot_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
         kpos = jnp.arange(t)
         mask = qpos[:, None] >= kpos[None, :]
     if kv_len is not None:
-        valid = jnp.arange(t)[None, :] < jnp.asarray(kv_len).reshape(-1, 1)
-        valid = valid.reshape(b, 1, 1, 1, t)
+        kvl = jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+        valid = (jnp.arange(t)[None, :] < kvl[:, None]).reshape(b, 1, 1, 1, t)
         scores = jnp.where(valid, scores, NEG_INF)
     if mask is not None:
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
@@ -62,30 +116,92 @@ def dot_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
 
 
 def chunked_causal_attention(q, k, v, *, chunk: int = 1024,
-                             scale: float | None = None):
+                             scale: float | None = None, kv_len=None):
     """Causal self-attention, scanned over query chunks (bounded memory).
 
-    Falls back to one chunk when S <= chunk. S must be divisible by chunk
-    (model seq lens are powers of two; chunk picked accordingly).
+    Falls back to one chunk when S <= chunk. A final ragged chunk is
+    handled by padding the query block — the padded rows attend only to
+    real keys (causal mask over real positions) and are sliced off, so
+    non-power-of-two prompt lengths are exact, not an assert.
     """
     b, s, hq, d = q.shape
     if s <= chunk:
-        return dot_attention(q, k, v, causal=True, scale=scale)
-    assert s % chunk == 0, (s, chunk)
-    n = s // chunk
-    qc = q.reshape(b, n, chunk, hq, d).transpose(1, 0, 2, 3, 4)
+        return dot_attention(q, k, v, causal=True, scale=scale,
+                             kv_len=kv_len)
+    n = -(-s // chunk)
+    sp = n * chunk
+    qp = q if sp == s else jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    qc = qp.reshape(b, n, chunk, hq, d).transpose(1, 0, 2, 3, 4)
 
     def body(_, args):
         i, qi = args
         off = i * chunk
         # attend only to keys < off + chunk: slice is dynamic in i, so attend
         # to the full prefix and mask; memory is (B,G,Hk,chunk,S).
-        oi = dot_attention(qi, k, v, causal=True, q_offset=off, scale=scale)
+        oi = dot_attention(qi, k, v, causal=True, q_offset=off, scale=scale,
+                           kv_len=kv_len)
         return None, oi
 
     _, out = jax.lax.scan(body, None, (jnp.arange(n), qc))
     # v's head dim may differ from q's (MLA: dv != dn+dr)
-    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, v.shape[-1])
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sp, hq, v.shape[-1])
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# dispatch entrypoints (one per shape family)
+# ---------------------------------------------------------------------------
+
+def prefill_attention(q, k, v, *, causal: bool = True, kv_len=None,
+                      chunk: int = 1024, scale: float | None = None,
+                      impl: str = "auto"):
+    """Full-sequence attention (train / prefill). kv_len masks keys past
+    each sequence's true length in a right-padded batch (bit-identical for
+    real rows — causality already hides trailing pads from them)."""
+    impl = resolve_attn_impl(impl, family="prefill")
+    if impl == "xla_ref":
+        if causal:
+            return chunked_causal_attention(q, k, v, chunk=chunk,
+                                            scale=scale, kv_len=kv_len)
+        return dot_attention(q, k, v, causal=False, kv_len=kv_len,
+                             scale=scale)
+    if impl == "xla_blockwise":
+        from repro.kernels.flash_attention import blockwise_attention_xla
+        return blockwise_attention_xla(q, k, v, causal=causal,
+                                       kv_len=kv_len, scale=scale,
+                                       q_block=chunk, kv_block=chunk)
+    if impl == "pallas_flash":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, kv_len=kv_len,
+                                      scale=scale)
+    raise ValueError(impl)
+
+
+def decode_attention(q, k, v, *, kv_len, scale: float | None = None,
+                     impl: str = "auto"):
+    """Single-query (S small) attend over a preallocated cache; kv_len is
+    the valid cache length per sequence (slot pools decode the full
+    preallocated T every tick and mask the tail)."""
+    impl = resolve_attn_impl(impl, family="decode")
+    if impl == "xla_ref":
+        return dot_attention(q, k, v, causal=False, kv_len=kv_len,
+                             scale=scale)
+    if impl == "xla_blockwise":
+        from repro.kernels.flash_attention import blockwise_attention_xla
+        return blockwise_attention_xla(q, k, v, causal=False, kv_len=kv_len,
+                                       scale=scale)
+    if impl == "pallas_flash":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=False, kv_len=kv_len,
+                                      scale=scale)
+    raise ValueError(impl)
+
+
+def cross_attention(q, k, v, *, kv_len=None, impl: str = "auto"):
+    """Full (non-causal) attention of q over an encoder context."""
+    impl = resolve_attn_impl(impl, family="cross")
+    return prefill_attention(q, k, v, causal=False, kv_len=kv_len,
+                             impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +217,27 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
     }
 
 
-def cache_update_decode(cache, k_new, v_new, *, method: str = "dus"):
+def resolve_cache_update(method: str = "auto") -> str:
+    """"auto" picks the scatter that partitions: "mask" whenever a multi-
+    device logical mesh is active (the per-batch dynamic_update_slice start
+    index defeats GSPMD and all-gathers the cache every step — measured
+    7.2 GB/token on whisper decode_32k), "dus" on a single device where
+    the masked update's full-cache write would only waste bandwidth.
+
+    Resolution happens at TRACE time: activate the mesh
+    (sharding.set_logical_rules) before jitting decode steps. A step traced
+    without the mesh keeps "dus" until something forces a retrace — which
+    sharded inputs do, since jit cache keys include input shardings."""
+    if method != "auto":
+        return method
+    from repro.distributed.sharding import active_mesh
+    mesh = active_mesh()
+    if mesh is not None and getattr(mesh, "size", 1) > 1:
+        return "mask"
+    return "dus"
+
+
+def cache_update_decode(cache, k_new, v_new, *, method: str = "auto"):
     """Insert one token per sequence at position cache['len'].
 
     method="dus": per-batch dynamic_update_slice (vmap). Under GSPMD the
@@ -110,7 +246,9 @@ def cache_update_decode(cache, k_new, v_new, *, method: str = "dus"):
     all-gather per token). method="mask": an elementwise where-update that
     partitions trivially along every axis — pure memory traffic, no
     collectives (see EXPERIMENTS.md section Perf, whisper_decode H1).
+    method="auto" (the default) picks "mask" when a sharded mesh is active.
     """
+    method = resolve_cache_update(method)
     idx = cache["len"]  # (B,)
 
     if method == "mask":
@@ -137,13 +275,15 @@ def cache_update_decode(cache, k_new, v_new, *, method: str = "dus"):
 # MLA (multi-head latent attention, DeepSeek-V2/V3, MiniCPM3)
 # ---------------------------------------------------------------------------
 
-def mla_prefill_attention(q_nope, q_rope, k_nope, k_rope, v, *, chunk=1024):
+def mla_prefill_attention(q_nope, q_rope, k_nope, k_rope, v, *, chunk=1024,
+                          kv_len=None, impl: str = "auto"):
     """Expanded-KV MLA prefill. q/k_nope (B,S,H,dn), q/k_rope (B,S,H,dr) with
     k_rope broadcast from a single shared rope head; v (B,S,H,dv)."""
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, k_rope], axis=-1)
     scale = 1.0 / math.sqrt(q.shape[-1])
-    return chunked_causal_attention(q, k, v, chunk=chunk, scale=scale)
+    return prefill_attention(q, k, v, causal=True, chunk=chunk, scale=scale,
+                             kv_len=kv_len, impl=impl)
 
 
 def mla_absorbed_decode(q_abs, q_rope, c_cache, kr_cache, kv_len, *,
@@ -154,6 +294,10 @@ def mla_absorbed_decode(q_abs, q_rope, c_cache, kr_cache, kv_len, *,
     q_rope: (B, 1, H, dr)
     c_cache:(B, T, kv_lora), kr_cache: (B, T, dr)
     Returns attention over the compressed values: (B, 1, H, kv_lora).
+
+    Deliberately NOT routed through the blockwise backends: the compressed
+    cache is the whole point (T x (kv_lora + dr) resident, no per-head
+    K/V), and the score tensor (B, H, 1, T) is already decode-sized.
     """
     s_nope = jnp.einsum("bshc,btc->bhst", q_abs, c_cache,
                         preferred_element_type=jnp.float32)
@@ -166,12 +310,3 @@ def mla_absorbed_decode(q_abs, q_rope, c_cache, kr_cache, kv_len, *,
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhst,btc->bshc", w.astype(c_cache.dtype), c_cache)
     return ctx
-
-
-# ---------------------------------------------------------------------------
-# cross attention (whisper decoder, llama-vision gated layers)
-# ---------------------------------------------------------------------------
-
-def cross_attention(q, k, v):
-    """Full (non-causal) attention of q over an encoder context."""
-    return dot_attention(q, k, v, causal=False)

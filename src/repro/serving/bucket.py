@@ -27,7 +27,11 @@ class Request:
 
 class BucketEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0,
+                 attn_impl: str | None = None):
+        if attn_impl is not None:
+            from repro.models import get_model
+            api = get_model(api.cfg.replace(attn_impl=attn_impl))
         self.api, self.params = api, params
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature

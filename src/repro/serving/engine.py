@@ -35,7 +35,12 @@ from repro.serving.scheduler import (FifoScheduler, Request, bucket_len,
 class ServeEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, attn_impl: str | None = None):
+        if attn_impl is not None:
+            # rebind every model fn to the requested attention backend
+            # (api closures capture cfg, so a fresh api is the only seam)
+            from repro.models import get_model
+            api = get_model(api.cfg.replace(attn_impl=attn_impl))
         if api.cache_insert is None:
             raise ValueError(
                 f"model family {api.cfg.family!r} has no slot-indexed cache "

@@ -3,6 +3,7 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.nn import attention as A
 from repro.nn.layers import apply_rope
@@ -95,6 +96,227 @@ def test_rope_preserves_norm_and_relativity():
         kj = apply_rope(k, jnp.array([j]))
         return float(jnp.sum(qi * kj))
     np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blockwise backends: pallas_flash (interpret) and xla_blockwise parity
+# against the score-materializing dot_attention reference
+# ---------------------------------------------------------------------------
+
+# per-dtype tolerances: f32 differs only by the online-softmax reassociation;
+# bf16 additionally rounds the p@v accumulation differently (ref accumulates
+# in bf16, flash in f32)
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+BLOCKWISE = ["pallas_flash", "xla_blockwise"]
+
+
+def _run_impl(impl, q, k, v, *, causal, kv_len=None, small_blocks=True):
+    """Invoke a blockwise backend with blocks small enough that the grid
+    actually iterates (both q and kv axes see multiple blocks)."""
+    if impl == "pallas_flash":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        kw = dict(bq=16, bk=16) if small_blocks else {}
+        return flash_attention_pallas(q, k, v, causal=causal, kv_len=kv_len,
+                                      interpret=True, **kw)
+    from repro.kernels.flash_attention import blockwise_attention_xla
+    kw = dict(q_block=16, kv_block=16) if small_blocks else {}
+    return blockwise_attention_xla(q, k, v, causal=causal, kv_len=kv_len,
+                                   **kw)
+
+
+@pytest.mark.parametrize("impl", BLOCKWISE)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("g", [1, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blockwise_parity(impl, causal, g, dtype):
+    hkv = 2
+    q, k, v = _qkv(s=96, hq=hkv * g, hkv=hkv, seed=7)
+    q, k, v = (x.astype(dtype) for x in (q, k, v))
+    ref = A.dot_attention(q, k, v, causal=causal)
+    got = _run_impl(impl, q, k, v, causal=causal)
+    assert got.dtype == v.dtype
+    tol = TOLS[dtype]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", BLOCKWISE)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blockwise_kv_len_masked_padded_batch(impl, dtype):
+    """Right-padded batch: rows past kv_len must not contribute."""
+    q, k, v = _qkv(s=64, seed=11)
+    q, k, v = (x.astype(dtype) for x in (q, k, v))
+    kv_len = jnp.array([37, 64], jnp.int32)
+    ref = A.dot_attention(q, k, v, causal=True, kv_len=kv_len)
+    got = _run_impl(impl, q, k, v, causal=True, kv_len=kv_len)
+    tol = TOLS[dtype]
+    # compare only valid query rows (pad rows are discarded downstream)
+    for b in range(2):
+        n = int(kv_len[b])
+        np.testing.assert_allclose(np.asarray(got[b, :n], np.float32),
+                                   np.asarray(ref[b, :n], np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", BLOCKWISE)
+def test_blockwise_decode_over_slot_cache(impl):
+    """Single-query decode against a partially-filled cache pool."""
+    b, t, hq, hkv, d = 3, 40, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d))
+    kc = jax.random.normal(ks[1], (b, t, hkv, d))
+    vc = jax.random.normal(ks[2], (b, t, hkv, d))
+    kv_len = jnp.array([5, 17, 40], jnp.int32)
+    ref = A.decode_attention(q, kc, vc, kv_len=kv_len, impl="xla_ref")
+    got = _run_impl(impl, q, kc, vc, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", BLOCKWISE)
+def test_blockwise_ragged_and_rect(impl):
+    """Non-block-multiple S and S != T (cross-attention shapes)."""
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (2, 50, 4, 16))
+    k = jax.random.normal(ks[1], (2, 70, 2, 16))
+    v = jax.random.normal(ks[2], (2, 70, 2, 16))
+    ref = A.dot_attention(q, k, v, causal=False)
+    got = _run_impl(impl, q, k, v, causal=False)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_mla_style_dv_neq_dq():
+    ks = jax.random.split(jax.random.PRNGKey(19), 3)
+    q = jax.random.normal(ks[0], (2, 48, 4, 24))
+    k = jax.random.normal(ks[1], (2, 48, 4, 24))
+    v = jax.random.normal(ks[2], (2, 48, 4, 16))
+    ref = A.dot_attention(q, k, v, causal=True)
+    for impl in BLOCKWISE:
+        got = _run_impl(impl, q, k, v, causal=True)
+        assert got.shape == (2, 48, 4, 16)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer
+# ---------------------------------------------------------------------------
+
+def test_resolve_attn_impl():
+    # explicit impls pass through untouched
+    for impl in ("xla_ref", "xla_blockwise", "pallas_flash"):
+        assert A.resolve_attn_impl(impl, family="prefill") == impl
+    # auto: decode stays on the reference; prefill picks per backend
+    assert A.resolve_attn_impl("auto", family="decode") == "xla_ref"
+    expected = ("xla_ref" if jax.default_backend() == "cpu"
+                else "pallas_flash")
+    assert A.resolve_attn_impl("auto", family="prefill") == expected
+    with pytest.raises(ValueError):
+        A.resolve_attn_impl("triton_flash")
+
+
+@pytest.mark.parametrize("impl", ["xla_ref", "xla_blockwise",
+                                  "pallas_flash"])
+def test_entrypoints_agree_across_impls(impl):
+    q, k, v = _qkv(s=64, seed=23)
+    ref = A.dot_attention(q, k, v, causal=True)
+    got = A.prefill_attention(q, k, v, chunk=32, impl=impl)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-5, atol=2e-5)
+    kv_len = jnp.full((2,), 64, jnp.int32)
+    refd = A.dot_attention(q[:, -1:], k, v, causal=False, kv_len=kv_len)
+    gotd = A.decode_attention(q[:, -1:], k, v, kv_len=kv_len, impl=impl)
+    np.testing.assert_allclose(np.asarray(gotd, np.float32),
+                               np.asarray(refd, np.float32),
+                               rtol=2e-5, atol=2e-5)
+    refx = A.dot_attention(q, k, v, causal=False)
+    gotx = A.cross_attention(q, k, v, impl=impl)
+    np.testing.assert_allclose(np.asarray(gotx, np.float32),
+                               np.asarray(refx, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["xla_ref", "xla_blockwise",
+                                  "pallas_flash"])
+def test_scalar_kv_len_all_impls(impl):
+    """A python-int kv_len must broadcast over the batch in every backend."""
+    q, k, v = _qkv(s=32, seed=31)
+    ref = A.dot_attention(q, k, v, causal=False,
+                          kv_len=jnp.full((2,), 20, jnp.int32))
+    got = A.decode_attention(q, k, v, kv_len=20, impl=impl)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_grad_matches_reference():
+    """Training goes through prefill_attention: the Pallas kernel's
+    custom_vjp (recompute via the XLA blockwise twin) must match grads of
+    the score-materializing reference."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    q, k, v = _qkv(s=32, seed=37)
+
+    def loss_flash(q, k, v):
+        return flash_attention_pallas(q, k, v, causal=True, bq=16,
+                                      bk=16, interpret=True).sum()
+
+    def loss_ref(q, k, v):
+        return A.dot_attention(q, k, v, causal=True).sum()
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_ragged_prompt_no_crash():
+    """s % chunk != 0 pads the final query block instead of asserting."""
+    q, k, v = _qkv(s=100, seed=29)
+    full = A.dot_attention(q, k, v, causal=True)
+    chunked = A.chunked_causal_attention(q, k, v, chunk=32)
+    assert chunked.shape == full.shape
+    np.testing.assert_allclose(np.asarray(chunked, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_resolve_cache_update_auto():
+    from repro.distributed import sharding
+
+    class _FakeMesh:
+        size = 8
+
+    prev_mesh, prev_rules = sharding._ACTIVE_MESH, sharding._ACTIVE_RULES
+    try:
+        sharding.set_logical_rules(None, None)
+        assert A.resolve_cache_update("auto") == "dus"
+        sharding.set_logical_rules(_FakeMesh(), sharding.MeshRules())
+        assert A.resolve_cache_update("auto") == "mask"
+        # explicit settings always win
+        assert A.resolve_cache_update("dus") == "dus"
+        assert A.resolve_cache_update("mask") == "mask"
+    finally:
+        sharding._ACTIVE_MESH, sharding._ACTIVE_RULES = prev_mesh, prev_rules
+
+
+def test_cache_update_methods_agree():
+    cache = A.init_kv_cache(2, 8, 2, 4, jnp.float32)
+    cache["len"] = jnp.array([0, 3], jnp.int32)
+    kn = jnp.ones((2, 1, 2, 4))
+    vn = jnp.full((2, 1, 2, 4), 2.0)
+    dus = A.cache_update_decode(dict(cache), kn, vn, method="dus")
+    msk = A.cache_update_decode(dict(cache), kn, vn, method="mask")
+    for key in ("k", "v", "len"):
+        np.testing.assert_array_equal(np.asarray(dus[key]),
+                                      np.asarray(msk[key]))
 
 
 def test_mla_absorbed_decode_consistency():
