@@ -1,0 +1,84 @@
+"""KV-cache codec triangle: decode tok/s x resident pool bytes x capacity.
+
+Three measurements per codec (bf16 / int8 / binary) at a fixed
+``(max_batch, max_len)`` geometry:
+
+  * decode tok/s — one jitted decode step over the full slot pool (the
+    engine's hot loop), half-full caches;
+  * pool bytes — the preallocated per-engine cache residency (reported as
+    the reduction vs bf16: the paper's Table IV memory column applied to
+    K/V storage; acceptance: >= 1.9x int8, >= 7x binary);
+  * capacity — the max ``max_batch`` whose pool fits a fixed byte budget,
+    i.e. how many more concurrent requests the codec buys per device.
+
+    PYTHONPATH=src python benchmarks/kvcache_bench.py
+"""
+
+import argparse
+import os
+import sys
+
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, ".."))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import time_fn
+from repro.configs import smoke_config
+from repro.models import get_model
+from repro.serving import kvcache as kvc
+
+CODECS = ("bf16", "int8", "binary")
+MIB = 1024 * 1024
+
+
+def run(quick: bool = True, *, budget_mib: int = 64):
+    max_batch, max_len = (8, 256) if quick else (16, 512)
+    # head_dim 64: the smallest geometry where the int8 ratio 2D/(D+2)
+    # clears 1.9x (the smoke default's D=16 only reaches 1.78x)
+    cfg = smoke_config("stablelm-3b").replace(
+        d_model=256, n_heads=4, n_kv_heads=4)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((max_batch, 1), jnp.int32)
+
+    rows = []
+    base_bytes = None
+    for name in CODECS:
+        a = get_model(cfg.replace(kv_cache=name))
+        caches = a.init_cache(max_batch, max_len)
+        # half-full pool: decode attends over a realistic valid prefix
+        caches = kvc.set_cache_lengths(
+            caches, jnp.full((max_batch,), max_len // 2, jnp.int32))
+        dec = jax.jit(a.decode)
+        dt = time_fn(dec, params, caches, toks, iters=10)
+        pool = kvc.kv_pool_bytes(caches)
+        if name == "bf16":
+            base_bytes = pool
+        red = base_bytes / pool
+        rows.append((f"kvcache/{name}_decode", dt * 1e6,
+                     f"{max_batch / dt:.1f} tok/s"))
+        rows.append((f"kvcache/{name}_pool", 0.0,
+                     f"{pool / MIB:.2f} MiB ({red:.2f}x vs bf16)"))
+        # capacity under a fixed budget: slots whose pool fits budget_mib
+        per_slot = kvc.kv_pool_bytes(a.init_cache(1, max_len))
+        rows.append((f"kvcache/{name}_slots_{budget_mib}mib", 0.0,
+                     f"{int(budget_mib * MIB // per_slot)} slots"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--budget-mib", type=int, default=64)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for n, us, derived in run(quick=not args.full,
+                              budget_mib=args.budget_mib):
+        print(f"{n},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

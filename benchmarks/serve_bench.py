@@ -78,6 +78,12 @@ def run(quick: bool = True, *, requests: int | None = None,
         ("serve/slot_tok_s", sdt / stoks * 1e6, f"{stoks / sdt:.1f} tok/s"),
         ("serve/slot_util", 0.0, f"{eng.utilization() * 100:.1f}%"),
         ("serve/speedup", 0.0, f"{bdt / sdt:.2f}x"),
+        # memory column next to throughput: the KV codec trade is invisible
+        # without it (see benchmarks/kvcache_bench.py for the codec sweep)
+        ("serve/slot_gen_tokens", 0.0,
+         f"{eng.stats['generated_tokens']} tokens"),
+        ("serve/slot_kv_bytes", 0.0,
+         f"{eng.stats['kv_bytes'] / 1024:.1f} KiB resident"),
     ]
     return rows
 

@@ -95,6 +95,11 @@ class ModelConfig:
     attn_impl: str = "auto"
     cache_update: str = "auto"        # auto | dus | mask (see attention.py;
     #                                   auto -> mask under a sharded mesh)
+    # KV-cache storage codec for GQA K/V pools: auto | bf16 | int8 | binary
+    # (auto = bf16; resolved by nn/attention.resolve_kv_cache and
+    # implemented in serving/kvcache.py. MLA's compressed cache is already
+    # the memory optimization for that family and stays bf16.)
+    kv_cache: str = "auto"
     shard_kv_heads: bool = True       # False: replicate wk/wv over model
     serve_cache_sharding: str = "explicit"  # explicit | auto (GSPMD picks)
     serve_mesh: str = ""              # e.g. "32x8": recarve pod for serving

@@ -38,6 +38,11 @@ def main(argv=None):
                     choices=["auto", "xla_ref", "xla_blockwise",
                              "pallas_flash"],
                     help="attention backend override (see nn/attention.py)")
+    ap.add_argument("--kv-cache", default=None,
+                    choices=["auto", "bf16", "int8", "binary"],
+                    help="KV-cache codec override (see serving/kvcache.py)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine sampling seed (temperature > 0)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -62,7 +67,8 @@ def main(argv=None):
                     "falling back to the bucket engine", cfg.family)
         cls = BucketEngine
     eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
-              temperature=args.temperature, attn_impl=args.attn_impl)
+              temperature=args.temperature, seed=args.seed,
+              attn_impl=args.attn_impl, kv_cache=args.kv_cache)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.choice(plens))

@@ -42,6 +42,16 @@ class ModelApi(NamedTuple):
 
 
 def get_model(cfg: ModelConfig) -> ModelApi:
+    from repro.nn.attention import resolve_kv_cache
+    if (cfg.family in ("whisper", "rwkv6")
+            and resolve_kv_cache(cfg.kv_cache) != "bf16"):
+        # whisper builds its own bf16 decoder/cross caches and rwkv6 keeps
+        # recurrent state, not a KV pool — a quantized codec would be
+        # silently ignored, so reject it loudly instead
+        raise ValueError(
+            f"family {cfg.family!r} has no codec-backed KV pool; "
+            f"kv_cache={cfg.kv_cache!r} is only supported for "
+            "dense/moe/vlm/mamba2_hybrid (leave it 'auto')")
     if cfg.family in ("dense", "moe"):
         from repro.models import transformer as t
         return ModelApi(

@@ -23,6 +23,7 @@ from repro.core.binary_dense import binary_dense_apply, binary_dense_init
 from repro.distributed.sharding import with_logical_constraint as wlc
 from repro.nn import layers as nn
 from repro.nn import attention as attn_lib
+from repro.serving import kvcache as kvc
 
 
 def padded_vocab(v: int) -> int:
@@ -135,13 +136,14 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions):
 
 
 def gqa_decode(p, x, cfg: ModelConfig, cache):
-    """One-token decode against the cache. x (B, 1, d)."""
+    """One-token decode against the cache. x (B, 1, d). The cache layout
+    (and for quantized codecs, the dequant-fused attend) is owned by the
+    ``cfg.kv_cache`` codec — see serving/kvcache.py."""
     positions = cache["len"][:, None]  # (B, 1)
     q, k, v = gqa_qkv(p, x, cfg, positions)
-    cache = attn_lib.cache_update_decode(cache, k, v,
-                                         method=cfg.cache_update)
-    o = attn_lib.decode_attention(q, cache["k"], cache["v"],
-                                  kv_len=cache["len"], impl=cfg.attn_impl)
+    codec = kvc.get_codec(cfg.kv_cache)
+    cache = codec.insert_timestep(cache, k, v, method=cfg.cache_update)
+    o = codec.decode_attention(q, cache, impl=cfg.attn_impl)
     o = o.reshape(*x.shape[:2], -1)
     return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
 
@@ -322,11 +324,9 @@ def block_decode(p, x, cfg: ModelConfig, sig: BlockSig, cache):
     return x + f, cache
 
 
-def _pad_time(a, max_len):
-    """Pad (B, S, ...) to (B, max_len, ...) along axis 1."""
-    pad = [(0, 0)] * a.ndim
-    pad[1] = (0, max_len - a.shape[1])
-    return jnp.pad(a, pad)
+# pad (B, S, ...) to (B, max_len, ...) along axis 1 — one definition for
+# both the codec layer and the MLA/whisper cache paths
+_pad_time = kvc._pad_time
 
 
 def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
@@ -364,8 +364,10 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
                                        kv_len=seq_lens, impl=cfg.attn_impl)
         a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
                            compute_dtype=cdt(cfg))
-        cache = {"k": _pad_time(k, max_len), "v": _pad_time(v, max_len),
-                 "len": jnp.full((b,), s, jnp.int32)}
+        # encode k/v into the configured cache codec (bf16 layout for
+        # "auto"; int8/binary quantize at prefill time so the pool never
+        # holds a dense bf16 copy)
+        cache = kvc.get_codec(cfg.kv_cache).from_prefill(k, v, max_len)
     x = x + a
     h = nn.rmsnorm_apply(p["ln2"], x)
     if sig.moe:
@@ -487,40 +489,32 @@ def segments_decode(params, x, cfg: ModelConfig, caches):
 def set_cache_lengths(caches, seq_lens):
     """Override per-sequence cache lengths after a right-padded prefill.
 
-    Prefill over a (B, Lb) bucket-padded batch writes K/V for the pad
-    positions too and stamps ``len = Lb``. Resetting ``len`` to the true
-    prompt lengths makes those pad entries invisible (every attention read
-    masks positions >= len) and makes the next decode token overwrite
-    position ``seq_lens`` — so a padded prefill is bit-identical to an
-    unpadded one from the first decode step on.
+    Lives behind the cache-codec seam now (serving/kvcache.py, where the
+    pad-invisibility contract is documented); layout-generic because every
+    codec stores time-axis leaves plus the same ``len`` leaf. Kept here as
+    the public model-side entrypoint.
     """
-    seq_lens = jnp.asarray(seq_lens, jnp.int32)
-    out = {}
-    for name, seg in caches.items():
-        seg = dict(seg)
-        seg["len"] = jnp.broadcast_to(seq_lens[None, :], seg["len"].shape)
-        out[name] = seg
-    return out
+    return kvc.set_cache_lengths(caches, seq_lens)
 
 
 def cache_insert_slots(pool, new, slots):
     """Scatter per-request prefill caches into decode-pool slots.
 
-    pool leaves are (layers, max_batch, ...) and new leaves (layers, G, ...)
-    with identical trailing dims (prefill must be called with the pool's
-    max_len). slots (G,) int32 gives the destination batch row per request;
-    out-of-range entries (>= max_batch) are dropped, which lets callers pad
-    a prefill group to a fixed size without a spare slot to aim at.
+    Lives behind the cache-codec seam now (serving/kvcache.py): prefill
+    encodes into the same codec layout as the pool, so the scatter
+    (including the out-of-range ``mode="drop"`` contract for padded
+    prefill groups) is one tree map whatever the codec.
     """
-    return jax.tree.map(
-        lambda dst, src: dst.at[:, slots].set(src.astype(dst.dtype),
-                                              mode="drop"),
-        pool, new)
+    return kvc.cache_insert_slots(pool, new, slots)
 
 
 def init_segment_caches(cfg: ModelConfig, batch: int, max_len: int,
                         dtype=jnp.bfloat16):
+    """Empty decode caches per segment. GQA segments allocate in the
+    ``cfg.kv_cache`` codec's layout; MLA's compressed cache is already the
+    memory optimization for that family and stays dense."""
     segs = build_segments(cfg)
+    codec = kvc.get_codec(cfg.kv_cache)
     caches = {}
     for si, (sig, start, count) in enumerate(segs):
         if sig.attn == "mla":
@@ -530,8 +524,8 @@ def init_segment_caches(cfg: ModelConfig, batch: int, max_len: int,
                 "len": jnp.zeros((batch,), jnp.int32),
             }
         else:
-            one = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads,
-                                         cfg.kv_head_dim(), dtype)
+            one = codec.init(batch, max_len, cfg.n_kv_heads,
+                             cfg.kv_head_dim(), dtype)
         caches[f"seg{si}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one)
     return caches

@@ -149,8 +149,10 @@ def _shared_prefill(p, x, cfg, positions, max_len):
                                    impl=cfg.attn_impl)
     a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
                        compute_dtype=lc.cdt(cfg))
-    cache = {"k": lc._pad_time(k, max_len), "v": lc._pad_time(v, max_len),
-             "len": jnp.full((b,), s, jnp.int32)}
+    # same codec layout as gqa_decode resolves (shared block decodes
+    # through lc.gqa_decode, so the cache must match cfg.kv_cache)
+    from repro.serving import kvcache as kvc
+    cache = kvc.get_codec(cfg.kv_cache).from_prefill(k, v, max_len)
     x = x + a
     h = nn.rmsnorm_apply(p["ln2"], x)
     return x + lc.ffn_apply(p["ffn"], h, cfg), cache
@@ -184,9 +186,9 @@ def zamba_init_cache(cfg: ModelConfig, batch: int, max_len: int):
         mcaches.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one))
     n_attn = _n_shared_calls(cfg)
-    from repro.nn import attention as attn_lib
-    ac = attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads,
-                                cfg.kv_head_dim(), lc.cdt(cfg))
+    from repro.serving import kvcache as kvc
+    ac = kvc.get_codec(cfg.kv_cache).init(batch, max_len, cfg.n_kv_heads,
+                                          cfg.kv_head_dim(), lc.cdt(cfg))
     acaches = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (n_attn, *a.shape)), ac)
     return {"mamba": mcaches, "attn": acaches}

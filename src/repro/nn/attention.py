@@ -48,6 +48,24 @@ NEG_INF = -1e9
 
 ATTN_IMPLS = ("auto", "xla_ref", "xla_blockwise", "pallas_flash")
 
+KV_CACHE_IMPLS = ("auto", "bf16", "int8", "binary")
+
+
+def resolve_kv_cache(impl: str = "auto") -> str:
+    """Resolve ``ModelConfig.kv_cache`` to a concrete cache codec name.
+
+    "auto" is bf16 — the historical dense layout — so every pre-codec
+    parity test and serving path is unchanged by default. The codec
+    implementations (including the dequant-fused decode paths for int8 /
+    binary) live in ``serving/kvcache.py``; this module keeps the bf16
+    reference seams (``init_kv_cache`` / ``cache_update_decode`` /
+    ``decode_attention``) that the bf16 codec delegates to.
+    """
+    if impl not in KV_CACHE_IMPLS:
+        raise ValueError(
+            f"unknown kv cache codec {impl!r}; known: {KV_CACHE_IMPLS}")
+    return "bf16" if impl == "auto" else impl
+
 
 def resolve_attn_impl(impl: str = "auto", *, family: str = "prefill") -> str:
     """family in {prefill, decode, cross} -> concrete impl for this call.
@@ -205,7 +223,8 @@ def cross_attention(q, k, v, *, kv_len=None, impl: str = "auto"):
 
 
 # ---------------------------------------------------------------------------
-# KV cache
+# KV cache (bf16 reference layout; serving/kvcache.py wraps this and the
+# quantized codecs behind one interface — resolve_kv_cache above picks one)
 # ---------------------------------------------------------------------------
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,

@@ -28,10 +28,15 @@ class Request:
 class BucketEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 attn_impl: str | None = None):
+                 attn_impl: str | None = None, kv_cache: str | None = None):
+        overrides = {}
         if attn_impl is not None:
+            overrides["attn_impl"] = attn_impl
+        if kv_cache is not None:
+            overrides["kv_cache"] = kv_cache
+        if overrides:
             from repro.models import get_model
-            api = get_model(api.cfg.replace(attn_impl=attn_impl))
+            api = get_model(api.cfg.replace(**overrides))
         self.api, self.params = api, params
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature

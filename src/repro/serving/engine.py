@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.kvcache import kv_pool_bytes
 from repro.serving.scheduler import (FifoScheduler, Request, bucket_len,
                                      make_buckets, pad_group)
 
@@ -35,12 +36,19 @@ from repro.serving.scheduler import (FifoScheduler, Request, bucket_len,
 class ServeEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 min_bucket: int = 8, attn_impl: str | None = None):
+                 min_bucket: int = 8, attn_impl: str | None = None,
+                 kv_cache: str | None = None):
+        overrides = {}
         if attn_impl is not None:
-            # rebind every model fn to the requested attention backend
-            # (api closures capture cfg, so a fresh api is the only seam)
+            overrides["attn_impl"] = attn_impl
+        if kv_cache is not None:
+            overrides["kv_cache"] = kv_cache
+        if overrides:
+            # rebind every model fn to the requested attention backend /
+            # cache codec (api closures capture cfg, so a fresh api is the
+            # only seam)
             from repro.models import get_model
-            api = get_model(api.cfg.replace(attn_impl=attn_impl))
+            api = get_model(api.cfg.replace(**overrides))
         if api.cache_insert is None:
             raise ValueError(
                 f"model family {api.cfg.family!r} has no slot-indexed cache "
@@ -62,8 +70,13 @@ class ServeEngine:
         # arrivals by step may also fast-forward it across idle gaps, as
         # benchmarks/serve_bench.py does
         self.step_count = 0
+        # kv_bytes: resident bytes of the preallocated cache pool — fixed
+        # at init (the pool never grows), so the codec trade is visible
+        # next to the throughput numbers
         self.stats = {"decode_steps": 0, "occupied_slot_steps": 0,
-                      "prefills": 0, "admitted": 0, "evictions": 0}
+                      "prefills": 0, "admitted": 0, "evictions": 0,
+                      "generated_tokens": 0,
+                      "kv_bytes": kv_pool_bytes(self.caches)}
         # the pool cache is donated: step/admit immediately rebind
         # self.caches, so XLA can update the (layers, B, T, ...) buffers in
         # place instead of copying the whole pool every tick
@@ -133,6 +146,7 @@ class ServeEngine:
                 r.out.append(int(nxt[j]))
                 self.next_tok[slot, 0] = nxt[j]
                 self.stats["admitted"] += 1
+                self.stats["generated_tokens"] += 1
                 if len(r.out) >= r.max_new:
                     self._finish(slot)
             free = [i for i, r in enumerate(self.slots) if r is None]
@@ -156,6 +170,7 @@ class ServeEngine:
             r = self.slots[i]
             r.out.append(int(nxt[i]))
             self.next_tok[i, 0] = nxt[i]
+            self.stats["generated_tokens"] += 1
             if len(r.out) >= r.max_new:
                 self._finish(i)
         return True

@@ -1,0 +1,381 @@
+"""Pluggable KV-cache codecs — the BEANNA binary/fp mode-mux applied to
+*storage* instead of compute.
+
+Every serving engine preallocates a dense ``(layers, max_batch, max_len,
+n_kv, head_dim)`` K/V pool per scan segment; after the slot engine (PR 1)
+and flash attention (PR 2), that pool's residency — not score
+materialization — caps ``max_batch x max_len`` per device. This module
+relocates every cache-layout assumption behind one seam: a small codec
+interface with three implementations,
+
+  bf16     the reference layout (``nn/attention.init_kv_cache`` /
+           ``cache_update_decode``), bit-compatible with everything that
+           existed before this subsystem; ``kv_cache="auto"`` resolves here.
+  int8     per-(token, head) absmax:  values int8 + scales bf16
+           (~2x smaller: D + 2 bytes vs 2D per head-row).
+  binary   the paper's binary-layer trade applied to K/V: sign bits packed
+           32/uint32 lane + per-(token, head) absmean scale bf16
+           (~14x smaller at D=128: D/8 + 2 bytes vs 2D).
+
+Codec layouts are ordinary pytrees with a ``len`` leaf, so the engine's
+slot scatter, ``jax.lax.scan`` stacking, and donation all work unchanged.
+Quantized decode attends through a *dequant-fused* blockwise path: a scan
+over kv blocks dequantizes one ``(B, kv_block, H, D)`` tile at a time
+inside the online-softmax recurrence (same recurrence as
+``kernels/flash_attention.blockwise_attention_xla``), so a full bf16 copy
+of the cache is never resident in HBM — the live dequantized tile is
+bounded by the block size. Quantize/dequantize lower through
+``kernels/kv_quant`` (Pallas on accelerators, XLA twins on CPU).
+
+MLA's compressed ``(c_kv, k_rope)`` cache is already the memory
+optimization for that attention family and stays bf16; the ``kv_cache``
+knob applies to GQA-family K/V pools (dense/MoE transformer blocks).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import packed_len
+from repro.kernels import kv_quant as kvq
+from repro.nn import attention as attn_lib
+
+NEG_INF = attn_lib.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# layout-generic ops (every codec shares these; lm_common delegates here)
+# ---------------------------------------------------------------------------
+
+def set_cache_lengths(caches, seq_lens):
+    """Override per-sequence cache lengths after a right-padded prefill.
+
+    Prefill over a (B, Lb) bucket-padded batch writes K/V for the pad
+    positions too and stamps ``len = Lb``. Resetting ``len`` to the true
+    prompt lengths makes those pad entries invisible (every attention read
+    masks positions >= len) and makes the next decode token overwrite
+    position ``seq_lens`` — so a padded prefill is bit-identical to an
+    unpadded one from the first decode step on. Layout-generic: only the
+    ``len`` leaf is touched, whatever the codec stores alongside it.
+    """
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    out = {}
+    for name, seg in caches.items():
+        seg = dict(seg)
+        seg["len"] = jnp.broadcast_to(seq_lens[None, :], seg["len"].shape)
+        out[name] = seg
+    return out
+
+
+def cache_insert_slots(pool, new, slots):
+    """Scatter per-request prefill caches into decode-pool slots.
+
+    pool leaves are (layers, max_batch, ...) and new leaves (layers, G, ...)
+    with identical trailing dims (prefill must be called with the pool's
+    max_len). slots (G,) int32 gives the destination batch row per request;
+    out-of-range entries (>= max_batch) are dropped, which lets callers pad
+    a prefill group to a fixed size without a spare slot to aim at.
+    Layout-generic: prefill encodes into the same codec layout as the pool,
+    so every leaf pair (quantized values, scales, lengths) lines up.
+    """
+    return jax.tree.map(
+        lambda dst, src: dst.at[:, slots].set(src.astype(dst.dtype),
+                                              mode="drop"),
+        pool, new)
+
+
+def kv_pool_bytes(caches) -> int:
+    """Resident bytes of a cache pytree, excluding the tiny ``len`` leaves
+    (so the number is directly comparable to bytes_per_token * tokens)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        key = getattr(path[-1], "key", None)
+        if key == "len":
+            continue
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _pad_time(a, max_len):
+    """Pad (B, S, ...) to (B, max_len, ...) along axis 1 (zeros: a zero
+    scale dequantizes to exactly 0, so pad rows stay inert even before
+    set_cache_lengths masks them)."""
+    pad = [(0, 0)] * a.ndim
+    pad[1] = (0, max_len - a.shape[1])
+    return jnp.pad(a, pad)
+
+
+def _write_timestep(cache, new_leaves, *, method):
+    """Insert one token per sequence at position cache['len'] for every
+    named leaf (values, scales, ...). Same dus/mask policy as
+    ``nn/attention.cache_update_decode`` (see that docstring for the GSPMD
+    rationale), generalized to arbitrary (B, T, ...) leaf ranks."""
+    method = attn_lib.resolve_cache_update(method)
+    idx = cache["len"]  # (B,)
+    out = dict(cache)
+    if method == "mask":
+        for name, new in new_leaves.items():
+            buf = cache[name]
+            t = buf.shape[1]
+            m = jnp.arange(t)[None, :] == idx[:, None]
+            m = m.reshape(m.shape[0], t, *([1] * (buf.ndim - 2)))
+            out[name] = jnp.where(m, new.astype(buf.dtype), buf)
+    else:
+        for name, new in new_leaves.items():
+            buf = cache[name]
+            out[name] = jax.vmap(
+                lambda b_, n_, i: jax.lax.dynamic_update_slice_in_dim(
+                    b_, n_, i, axis=0))(buf, new.astype(buf.dtype), idx)
+    out["len"] = idx + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dequant-fused decode: blockwise online softmax over the encoded cache
+# ---------------------------------------------------------------------------
+
+def _fused_quant_decode(q, cache, codec, *, scale=None, kv_block: int = 128):
+    """Single-query attention over a quantized cache without materializing
+    it. A scan over kv blocks dequantizes one (B, kb, H, D) tile per step
+    and folds it into the flash-style (num, den, max) recurrence — the
+    bounded-tile discipline of blockwise_attention_xla, with dequant fused
+    into the block load. Returns (B, S, Hq, D) in q's dtype."""
+    b, s, hq, d = q.shape
+    enc = codec.encoded_leaves(cache)
+    t = next(iter(enc.values())).shape[1]
+    hkv = codec.n_kv(cache)
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = jnp.minimum(cache["len"].astype(jnp.int32), t)
+
+    kb = min(kv_block, t)
+    nk = -(-t // kb)
+
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+
+    def one_kv_block(carry, jk):
+        num, den, m_prev = carry
+        # slice the block out of the encoded pool in place — no padded /
+        # transposed copy of the whole cache per decode step. A ragged
+        # final block is handled by clamping the slice start to t - kb and
+        # masking the columns block jk-1 already consumed.
+        start = jnp.minimum(jk * kb, t - kb)
+        blk = {name: jax.lax.dynamic_slice_in_dim(leaf, start, kb, axis=1)
+               for name, leaf in enc.items()}
+        k_blk, v_blk = codec.dequant_block(blk, d)     # (B, kb, Hkv, D) f32
+        sij = jnp.einsum("bshgd,bkhd->bhgsk", qg, k_blk,
+                         preferred_element_type=jnp.float32) * scale
+        cols = start + jnp.arange(kb)
+        valid = (cols >= jk * kb) & (cols[None, :] < kv_len[:, None])
+        valid = valid[:, None, None, None, :]
+        sij = jnp.where(valid, sij, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(sij, -1))   # (B, Hkv, G, S)
+        p = jnp.exp(sij - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        den = den * alpha + jnp.sum(p, -1)
+        num = num * alpha[..., None] + jnp.einsum(
+            "bhgsk,bkhd->bhgsd", p, v_blk,
+            preferred_element_type=jnp.float32)
+        return (num, den, m_cur), None
+
+    init = (jnp.zeros((b, hkv, g, s, d), jnp.float32),
+            jnp.zeros((b, hkv, g, s), jnp.float32),
+            jnp.full((b, hkv, g, s), NEG_INF, jnp.float32))
+    (num, den, _), _ = jax.lax.scan(one_kv_block, init, jnp.arange(nk))
+    den = jnp.where(den == 0.0, 1.0, den)
+    out = num / den[..., None]                          # (B, Hkv, G, S, D)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+class CacheCodec:
+    """One KV-cache storage format. Layouts are flat dicts of arrays with a
+    ``len`` leaf; all other leaves carry time on axis 1, so the engine's
+    scatter / scan stacking / donation never see the codec."""
+
+    name: str = ""
+
+    # layout-generic by construction (time-axis leaves + a ``len`` leaf are
+    # the layout contract, so one tree scatter / len rewrite serves every
+    # codec): these are interface aliases of the module-level functions,
+    # which remain the actual call targets (lm_common delegates there) — a
+    # codec whose layout breaks the contract needs a new seam, not an
+    # override here
+    insert_slots = staticmethod(cache_insert_slots)
+    set_lengths = staticmethod(set_cache_lengths)
+
+    def init(self, batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16):
+        raise NotImplementedError
+
+    def encode(self, k, v):
+        """(B, S, H, D) bf16/f32 k, v -> dict of encoded leaves (no len)."""
+        raise NotImplementedError
+
+    def from_prefill(self, k, v, max_len):
+        """Encode a prefilled (B, S, H, D) k/v pair into a max_len cache."""
+        b, s = k.shape[:2]
+        enc = {name: _pad_time(leaf, max_len)
+               for name, leaf in self.encode(k, v).items()}
+        enc["len"] = jnp.full((b,), s, jnp.int32)
+        return enc
+
+    def insert_timestep(self, cache, k_new, v_new, *, method="auto"):
+        """Insert one token per sequence at position cache['len']."""
+        return _write_timestep(cache, self.encode(k_new, v_new),
+                               method=method)
+
+    def materialize(self, cache, dtype=jnp.bfloat16, *, head_dim=None):
+        """Full dequantized (k, v), both (B, T, H, D) — tests/debug only;
+        the decode path never calls this for quantized codecs. ``head_dim``
+        is required only for codecs whose layout can't recover D (binary
+        bit-packing rounds D up to whole uint32 lanes)."""
+        raise NotImplementedError
+
+    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+        raise NotImplementedError
+
+    def bytes_per_token(self, n_kv: int, head_dim: int) -> int:
+        """Resident cache bytes per token per layer (k and v together)."""
+        raise NotImplementedError
+
+    # --- hooks for the fused decode path (quantized codecs) ---
+
+    def encoded_leaves(self, cache):
+        return {k: v for k, v in cache.items() if k != "len"}
+
+    def n_kv(self, cache):
+        raise NotImplementedError
+
+    def dequant_block(self, blk, d):
+        """dict of (B, kb, ...) encoded leaves -> (k, v) (B, kb, H, D) f32."""
+        raise NotImplementedError
+
+
+class Bf16Codec(CacheCodec):
+    """The reference layout: exactly the pre-codec cache, so every existing
+    parity test (and ``kv_cache="auto"``) is unchanged bit for bit."""
+
+    name = "bf16"
+
+    def init(self, batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16):
+        return attn_lib.init_kv_cache(batch, max_len, n_kv, head_dim, dtype)
+
+    def encode(self, k, v):
+        return {"k": k, "v": v}
+
+    def insert_timestep(self, cache, k_new, v_new, *, method="auto"):
+        # delegate to the historical update (bit-compatible by construction)
+        return attn_lib.cache_update_decode(cache, k_new, v_new,
+                                            method=method)
+
+    def materialize(self, cache, dtype=jnp.bfloat16, *, head_dim=None):
+        return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+        return attn_lib.decode_attention(q, cache["k"], cache["v"],
+                                         kv_len=cache["len"], scale=scale,
+                                         impl=impl)
+
+    def bytes_per_token(self, n_kv, head_dim):
+        return 2 * n_kv * head_dim * 2
+
+
+class Int8Codec(CacheCodec):
+    """values int8 + per-(token, head) absmax scale bf16."""
+
+    name = "int8"
+
+    def init(self, batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16):
+        return {
+            "k_q": jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+            "k_s": jnp.zeros((batch, max_len, n_kv), jnp.bfloat16),
+            "v_q": jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+            "v_s": jnp.zeros((batch, max_len, n_kv), jnp.bfloat16),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def encode(self, k, v):
+        k_q, k_s = kvq.kv_quant_int8(k)
+        v_q, v_s = kvq.kv_quant_int8(v)
+        return {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s}
+
+    def materialize(self, cache, dtype=jnp.bfloat16, *, head_dim=None):
+        return (kvq.kv_dequant_int8(cache["k_q"], cache["k_s"], dtype=dtype),
+                kvq.kv_dequant_int8(cache["v_q"], cache["v_s"], dtype=dtype))
+
+    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+        del impl  # fused path is the whole point; decode is already O(T)
+        return _fused_quant_decode(q, cache, self, scale=scale)
+
+    def n_kv(self, cache):
+        return cache["k_q"].shape[2]
+
+    def dequant_block(self, blk, d):
+        return (kvq.kv_dequant_int8_xla(blk["k_q"], blk["k_s"], jnp.float32),
+                kvq.kv_dequant_int8_xla(blk["v_q"], blk["v_s"], jnp.float32))
+
+    def bytes_per_token(self, n_kv, head_dim):
+        return 2 * n_kv * (head_dim + 2)
+
+
+class BinaryCodec(CacheCodec):
+    """sign bits packed 32/lane + per-(token, head) absmean scale bf16 —
+    the BEANNA binary-layer memory trade applied to K/V. Lossy (documented
+    tolerance in tests/test_kvcache.py); greedy decode stays coherent but
+    is not token-identical to bf16."""
+
+    name = "binary"
+
+    def init(self, batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16):
+        kp = packed_len(head_dim)
+        return {
+            "k_p": jnp.zeros((batch, max_len, n_kv, kp), jnp.uint32),
+            "k_s": jnp.zeros((batch, max_len, n_kv), jnp.bfloat16),
+            "v_p": jnp.zeros((batch, max_len, n_kv, kp), jnp.uint32),
+            "v_s": jnp.zeros((batch, max_len, n_kv), jnp.bfloat16),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def encode(self, k, v):
+        k_p, k_s = kvq.kv_quant_binary(k)
+        v_p, v_s = kvq.kv_quant_binary(v)
+        return {"k_p": k_p, "k_s": k_s, "v_p": v_p, "v_s": v_s}
+
+    def materialize(self, cache, dtype=jnp.bfloat16, *, head_dim=None):
+        if head_dim is None:
+            raise ValueError("BinaryCodec.materialize needs head_dim "
+                             "(bit-packing rounds D up to whole lanes)")
+        return (kvq.kv_dequant_binary(cache["k_p"], cache["k_s"], head_dim,
+                                      dtype=dtype),
+                kvq.kv_dequant_binary(cache["v_p"], cache["v_s"], head_dim,
+                                      dtype=dtype))
+
+    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+        del impl
+        return _fused_quant_decode(q, cache, self, scale=scale)
+
+    def n_kv(self, cache):
+        return cache["k_p"].shape[2]
+
+    def dequant_block(self, blk, d):
+        return (kvq.kv_dequant_binary_xla(blk["k_p"], blk["k_s"], d,
+                                          jnp.float32),
+                kvq.kv_dequant_binary_xla(blk["v_p"], blk["v_s"], d,
+                                          jnp.float32))
+
+    def bytes_per_token(self, n_kv, head_dim):
+        return 2 * n_kv * (4 * packed_len(head_dim) + 2)
+
+
+_CODECS = {"bf16": Bf16Codec(), "int8": Int8Codec(), "binary": BinaryCodec()}
+
+
+def get_codec(name: str = "auto") -> CacheCodec:
+    """Resolve a ``ModelConfig.kv_cache`` value ("auto" -> bf16)."""
+    return _CODECS[attn_lib.resolve_kv_cache(name)]
