@@ -9,7 +9,7 @@ def main() -> None:
                     help="long versions (more epochs, bigger shapes)")
     ap.add_argument("--only", default="",
                     help="comma list: tables,fig2,kernels,attn,roofline,"
-                         "serve,kvcache")
+                         "serve,prefix,kvcache")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -24,6 +24,7 @@ def main() -> None:
         ("fig2", fig2_training.run),
         ("roofline", roofline.run),
         ("serve", serve_bench.run),
+        ("prefix", serve_bench.run_prefix),
         ("kvcache", kvcache_bench.run),
     ]
     print("name,us_per_call,derived")

@@ -41,6 +41,15 @@ def main(argv=None):
     ap.add_argument("--kv-cache", default=None,
                     choices=["auto", "bf16", "int8", "binary"],
                     help="KV-cache codec override (see serving/kvcache.py)")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="paged KV pool block size in tokens (0 = slot-"
+                         "contiguous pool; slot engine only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged pool "
+                         "(requires --kv-block-size > 0)")
+    ap.add_argument("--stop-tokens", default="",
+                    help="comma list of token ids that end generation "
+                         "early (EOS-style; slot engine only)")
     ap.add_argument("--seed", type=int, default=0,
                     help="engine sampling seed (temperature > 0)")
     args = ap.parse_args(argv)
@@ -66,14 +75,28 @@ def main(argv=None):
         log.warning("family %r has no slot-indexed cache insert; "
                     "falling back to the bucket engine", cfg.family)
         cls = BucketEngine
-    eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
-              temperature=args.temperature, seed=args.seed,
-              attn_impl=args.attn_impl, kv_cache=args.kv_cache)
+    stop = frozenset(int(x) for x in args.stop_tokens.split(",") if x)
+    if cls is ServeEngine:
+        eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
+                  temperature=args.temperature, seed=args.seed,
+                  attn_impl=args.attn_impl, kv_cache=args.kv_cache,
+                  kv_block_size=args.kv_block_size,
+                  prefix_cache=args.prefix_cache)
+    else:
+        if args.kv_block_size or args.prefix_cache or stop:
+            ap.error("--kv-block-size/--prefix-cache/--stop-tokens need "
+                     "the slot engine")
+        eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
+                  temperature=args.temperature, seed=args.seed,
+                  attn_impl=args.attn_impl, kv_cache=args.kv_cache)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.choice(plens))
         prompt = rng.integers(0, cfg.vocab, plen)
-        eng.add_request(prompt, max_new=args.max_new)
+        if isinstance(eng, ServeEngine):
+            eng.add_request(prompt, max_new=args.max_new, stop_tokens=stop)
+        else:
+            eng.add_request(prompt, max_new=args.max_new)
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0

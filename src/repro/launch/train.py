@@ -126,7 +126,7 @@ def main(argv=None):
                  dt / len(history), sup.watchdog.straggler_steps)
     if args.ckpt_dir:
         checkpoint_fn((params, opt), len(history))
-        time.sleep(0.5)
+        C.wait_for_saves()                     # join async writers before exit
     return history
 
 

@@ -29,6 +29,14 @@ class ModelApi(NamedTuple):
     # continuous-batching serving engine; None when the family's cache
     # layout doesn't support partial-batch insertion yet.
     cache_insert: Callable | None = None
+    # paged-pool seams (radix prefix cache): init_paged_cache(n_blocks,
+    # block_size, max_batch, n_pages) allocates the shared block pool +
+    # per-slot block tables; prefill_ctx(params, batch, ctx, ctx_lens,
+    # max_len=, seq_lens=) prefills a prompt *suffix* against a cached-
+    # prefix context gathered from that pool. None for families whose
+    # caches have no paged layout (MLA/SSM/whisper).
+    init_paged_cache: Callable | None = None
+    prefill_ctx: Callable | None = None
 
     def init_deployed(self, key):
         """Deploy-time params: binary latents -> packed/int8 weights."""
@@ -54,6 +62,7 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             "dense/moe/vlm/mamba2_hybrid (leave it 'auto')")
     if cfg.family in ("dense", "moe"):
         from repro.models import transformer as t
+        paged = not cfg.use_mla    # MLA's compressed cache is not paged
         return ModelApi(
             cfg=cfg,
             init=lambda key: t.lm_init(key, cfg),
@@ -64,6 +73,14 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             init_cache=lambda bs, ml: t.lm_init_cache(cfg, bs, ml),
             param_rules=t.PARAM_RULES,
             cache_insert=t.lm_cache_insert,
+            init_paged_cache=(
+                (lambda nb, bsz, mb, npg:
+                 t.lm_init_paged_cache(cfg, nb, bsz, mb, npg))
+                if paged else None),
+            prefill_ctx=(
+                (lambda p, b, ctx, cl, **kw:
+                 t.lm_prefill_ctx(p, cfg, b["tokens"], ctx, cl, **kw))
+                if paged else None),
         )
     if cfg.family == "vlm":
         from repro.models import llama_vision as v

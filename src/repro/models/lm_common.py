@@ -138,12 +138,18 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions):
 def gqa_decode(p, x, cfg: ModelConfig, cache):
     """One-token decode against the cache. x (B, 1, d). The cache layout
     (and for quantized codecs, the dequant-fused attend) is owned by the
-    ``cfg.kv_cache`` codec — see serving/kvcache.py."""
+    ``cfg.kv_cache`` codec — see serving/kvcache.py. A paged cache (block
+    pool + per-slot block table, detected by its "table" leaf) inserts and
+    attends through the block table instead."""
     positions = cache["len"][:, None]  # (B, 1)
     q, k, v = gqa_qkv(p, x, cfg, positions)
     codec = kvc.get_codec(cfg.kv_cache)
-    cache = codec.insert_timestep(cache, k, v, method=cfg.cache_update)
-    o = codec.decode_attention(q, cache, impl=cfg.attn_impl)
+    if "table" in cache:
+        cache = kvc.paged_insert_timestep(cache, k, v, codec)
+        o = kvc.paged_decode_attention(q, cache, codec)
+    else:
+        cache = codec.insert_timestep(cache, k, v, method=cfg.cache_update)
+        o = codec.decode_attention(q, cache, impl=cfg.attn_impl)
     o = o.reshape(*x.shape[:2], -1)
     return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
 
@@ -330,16 +336,25 @@ _pad_time = kvc._pad_time
 
 
 def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
-                  max_len, seq_lens=None):
+                  max_len, seq_lens=None, ctx=None, ctx_len=None):
     """Full-sequence forward that also emits this block's decode cache.
 
     seq_lens (B,) masks keys past each sequence's true length in a right-
     padded batch. Real rows are bit-identical either way (causality already
     hides trailing pads from them); passing it keeps the pad rows' scores
-    from wandering and exercises the kernels' kv_len path."""
+    from wandering and exercises the kernels' kv_len path.
+
+    ctx / ctx_len carry a cached-prefix context for suffix prefill (the
+    radix prefix cache): ctx is this block's {"k", "v"} (B, P, Hkv, D)
+    gathered from the paged pool, ctx_len (B,) its valid lengths, and
+    ``positions`` must then be the absolute (B, S) positions of the suffix
+    tokens. GQA only — MLA's compressed cache is not paged."""
     b, s, _ = x.shape
     h = nn.rmsnorm_apply(p["ln1"], x)
     if sig.attn == "mla":
+        if ctx is not None:
+            raise ValueError("cached-prefix (suffix) prefill requires GQA "
+                             "blocks; MLA caches are not paged")
         q_nope, q_rope = _mla_q(p["attn"], h, cfg, positions)
         c_kv, k_rope = _mla_ckv(p["attn"], h, cfg, positions)
         hh, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
@@ -360,8 +375,14 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
                  "len": jnp.full((b,), s, jnp.int32)}
     else:
         q, k, v = gqa_qkv(p["attn"], h, cfg, positions)
-        o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
-                                       kv_len=seq_lens, impl=cfg.attn_impl)
+        if ctx is not None:
+            o = attn_lib.prefix_prefill_attention(q, ctx["k"], ctx["v"],
+                                                  ctx_len, k, v,
+                                                  kv_len=seq_lens)
+        else:
+            o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
+                                           kv_len=seq_lens,
+                                           impl=cfg.attn_impl)
         a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
                            compute_dtype=cdt(cfg))
         # encode k/v into the configured cache codec (bf16 layout for
@@ -379,24 +400,32 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
 
 
 def segments_prefill(params, x, cfg: ModelConfig, *, positions, max_len,
-                     seq_lens=None):
+                     seq_lens=None, ctx=None, ctx_len=None):
+    """ctx (optional): per-segment cached-prefix context for suffix prefill
+    — {"seg{i}": {"k"/"v": (count, B, P, Hkv, D)}}, scanned over layers
+    alongside the stacked params."""
     segs = build_segments(cfg)
     caches = {}
     for si, (sig, start, count) in enumerate(segs):
         stacked = params[f"seg{si}"]
+        ctx_seg = None if ctx is None else ctx[f"seg{si}"]
 
-        def one(x, p, sig=sig):
+        def one(x, pc, sig=sig):
+            p, c = pc
             return block_prefill(p, x, cfg, sig, positions=positions,
-                                 max_len=max_len, seq_lens=seq_lens)
+                                 max_len=max_len, seq_lens=seq_lens,
+                                 ctx=c, ctx_len=ctx_len)
 
         if cfg.scan_layers and count > 1:
-            x, cache = jax.lax.scan(one, x, stacked)
+            x, cache = jax.lax.scan(one, x, (stacked, ctx_seg))
         else:
             outs = []
             for i in range(count):
                 p_i = jax.tree.map(lambda a: a[i], stacked)
-                x, c_i = one(x, p_i)
-                outs.append(c_i)
+                c_i = (None if ctx_seg is None
+                       else jax.tree.map(lambda a: a[i], ctx_seg))
+                x, c_out = one(x, (p_i, c_i))
+                outs.append(c_out)
             cache = jax.tree.map(lambda *a: jnp.stack(a), *outs)
         caches[f"seg{si}"] = cache
     return x, caches
@@ -526,6 +555,30 @@ def init_segment_caches(cfg: ModelConfig, batch: int, max_len: int,
         else:
             one = codec.init(batch, max_len, cfg.n_kv_heads,
                              cfg.kv_head_dim(), dtype)
+        caches[f"seg{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one)
+    return caches
+
+
+def init_paged_segment_caches(cfg: ModelConfig, n_blocks: int,
+                              block_size: int, max_batch: int, n_pages: int,
+                              dtype=jnp.bfloat16):
+    """Paged decode pool per segment: a shared (n_blocks, block_size, ...)
+    block pool in the ``cfg.kv_cache`` codec's layout plus per-slot block
+    tables (see serving/kvcache.init_paged). GQA segments only: MLA's
+    compressed per-slot cache is already its memory optimization and has
+    no block layout to share."""
+    segs = build_segments(cfg)
+    codec = kvc.get_codec(cfg.kv_cache)
+    caches = {}
+    for si, (sig, start, count) in enumerate(segs):
+        if sig.attn == "mla":
+            raise ValueError(
+                "paged KV pool requires GQA attention blocks; "
+                f"segment {si} of {cfg.name!r} is MLA (use the "
+                "slot-contiguous pool for MLA families)")
+        one = kvc.init_paged(codec, n_blocks, block_size, cfg.n_kv_heads,
+                             cfg.kv_head_dim(), max_batch, n_pages, dtype)
         caches[f"seg{si}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one)
     return caches

@@ -140,6 +140,35 @@ def lm_prefill(params, cfg: ModelConfig, tokens, *, max_len=None,
     return logits[:, 0], caches
 
 
+def lm_prefill_ctx(params, cfg: ModelConfig, tokens, ctx, ctx_lens, *,
+                   max_len, seq_lens):
+    """Suffix prefill continuing a cached prefix (the radix prefix cache).
+
+    tokens (B, S) holds only the *suffix* of each prompt (right-padded;
+    seq_lens (B,) true suffix lengths); ctx is the per-segment cached-
+    prefix K/V gathered from the paged pool (kvcache.gather_prefix_context)
+    with ctx_lens (B,) valid prefix tokens (multiples of the block size;
+    0 = no cached prefix for that row). Suffix tokens run at absolute
+    positions ctx_lens[b] + j, attend to the full cached prefix plus the
+    suffix causally, and the returned caches hold the suffix K/V only
+    (len = seq_lens) — the engine scatters them into the slot's private
+    blocks and sets the pool length to ctx + suffix.
+    """
+    s = tokens.shape[1]
+    ctx_lens = jnp.asarray(ctx_lens, jnp.int32)
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    positions = ctx_lens[:, None] + jnp.arange(s)[None, :]
+    x = _embed(params, cfg, tokens)
+    h, caches = lc.segments_prefill(params["blocks"], x, cfg,
+                                    positions=positions, max_len=max_len,
+                                    seq_lens=seq_lens, ctx=ctx,
+                                    ctx_len=ctx_lens)
+    h_last = h[jnp.arange(h.shape[0]), seq_lens - 1][:, None, :]
+    caches = lc.set_cache_lengths(caches, seq_lens)
+    logits = _logits(params, cfg, h_last)
+    return logits[:, 0], caches
+
+
 def lm_decode(params, cfg: ModelConfig, caches, tokens):
     """tokens (B, 1) -> (logits (B, vocab), new caches)."""
     x = _embed(params, cfg, tokens)
@@ -151,6 +180,14 @@ def lm_decode(params, cfg: ModelConfig, caches, tokens):
 def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return lc.init_segment_caches(cfg, batch, max_len,
                                   dtype=lc.cdt(cfg))
+
+
+def lm_init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        max_batch: int, n_pages: int):
+    """Paged decode pool (shared block pool + per-slot block tables)."""
+    return lc.init_paged_segment_caches(cfg, n_blocks, block_size,
+                                        max_batch, n_pages,
+                                        dtype=lc.cdt(cfg))
 
 
 def lm_cache_insert(pool, new, slots):

@@ -222,6 +222,51 @@ def cross_attention(q, k, v, *, kv_len=None, impl: str = "auto"):
                              impl=impl)
 
 
+def prefix_prefill_attention(q, k_ctx, v_ctx, ctx_len, k, v, *, kv_len=None,
+                             scale: float | None = None):
+    """Suffix prefill continuing a cached prefix: one softmax over
+    [prefix context ++ suffix].
+
+    Each query attends to (a) every valid position of a right-padded cached
+    prefix (columns < ctx_len[b]) and (b) the suffix itself, causally —
+    exactly the key set the same tokens would see in a full-sequence
+    prefill, so with a lossless context this is the same attention up to
+    fp summation order. Queries carry absolute positions (RoPE applied at
+    ctx_len[b] + j by the caller); the context arrives already gathered /
+    dequantized from the paged pool (serving/kvcache.gather_prefix_context).
+
+    q (B, S, Hq, D); k_ctx/v_ctx (B, P, Hkv, D); ctx_len (B,) valid prefix
+    tokens (0 = no cached prefix for that row); k/v (B, S, Hkv, D); kv_len
+    (B,) true suffix lengths of a right-padded suffix batch. Score tile is
+    (B, Hkv, G, S, P + S) — bounded by the admission buckets, never by the
+    pool. Returns (B, S, Hq, D) in q's dtype.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    p = k_ctx.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, hkv, g, d)
+    s_ctx = _grouped_scores(qg, k_ctx) * scale          # (B,Hk,G,S,P)
+    s_suf = _grouped_scores(qg, k) * scale              # (B,Hk,G,S,S)
+    ctx_len = jnp.asarray(ctx_len, jnp.int32)
+    valid_ctx = (jnp.arange(p)[None, :] <
+                 ctx_len[:, None]).reshape(b, 1, 1, 1, p)
+    s_ctx = jnp.where(valid_ctx, s_ctx, NEG_INF)
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    mask_suf = causal[None, None, None]
+    if kv_len is not None:
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                               (b,))
+        mask_suf = mask_suf & (jnp.arange(s)[None, :]
+                               < kvl[:, None]).reshape(b, 1, 1, 1, s)
+    s_suf = jnp.where(mask_suf, s_suf, NEG_INF)
+    w = jax.nn.softmax(jnp.concatenate([s_ctx, s_suf], axis=-1), axis=-1)
+    out = (_grouped_out(w[..., :p], v_ctx).astype(jnp.float32)
+           + _grouped_out(w[..., p:], v).astype(jnp.float32))
+    return out.reshape(b, s, hq, v.shape[-1]).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # KV cache (bf16 reference layout; serving/kvcache.py wraps this and the
 # quantized codecs behind one interface — resolve_kv_cache above picks one)

@@ -1,11 +1,10 @@
 """Continuous-batching slot engine.
 
-A fixed pool of ``max_batch`` decode slots, each backed by a preallocated
-per-slot KV cache of ``max_len``. The decode step is a single jitted call
-over the *whole* pool every tick — its shape never changes, so it compiles
-exactly once — and requests flow through three states:
+A fixed pool of ``max_batch`` decode slots. The decode step is a single
+jitted call over the *whole* pool every tick — its shape never changes, so
+it compiles exactly once — and requests flow through three states:
 
-  queued -> admitted (prefill into a free slot) -> evicted (max_new reached)
+  queued -> admitted (prefill into a free slot) -> evicted (max_new / stop)
 
 Admission happens *between decode steps*: finished requests free their slot
 at the end of a tick and the scheduler immediately prefills queued work into
@@ -20,24 +19,54 @@ ignored. That is the BEANNA trade expressed at the serving layer: a fixed
 systolic-array-shaped batch with full occupancy beats perfectly-sized but
 ragged launches, because the hot loop never recompiles and eviction /
 admission cost only a cache scatter.
+
+Two cache backends (``kv_block_size``):
+
+  0 (default)   slot-contiguous: each slot owns a private (max_len, ...)
+                KV region — the historical layout, bit-compatible.
+  > 0           paged: one shared block pool + per-slot block tables
+                (serving/kvcache.py). With ``prefix_cache=True`` a radix
+                tree over token blocks (serving/prefix.py) lets requests
+                sharing a prompt prefix share the prefix's physical blocks
+                and prefill only their un-cached suffix — O(unique suffix)
+                instead of O(prompt) prefill under multi-user traffic.
+
+Sampling (``temperature > 0``) uses per-request RNG streams: request
+``rid``'s token t is drawn from fold_in(fold_in(seed_key, rid), t), so a
+request's sampled output is a function of (params, prompt, seed, rid) only
+— independent of pool size, co-resident traffic, and admission batching.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import kvcache as kvc
 from repro.serving.kvcache import kv_pool_bytes
+from repro.serving.prefix import PrefixPool
 from repro.serving.scheduler import (FifoScheduler, Request, bucket_len,
                                      make_buckets, pad_group)
+
+
+@dataclasses.dataclass
+class _PagedSlot:
+    """Host-side block accounting for one occupied slot (paged mode)."""
+    plen: int                    # prompt tokens
+    row: np.ndarray              # (n_pages,) physical ids, holes = sentinel
+    chain: list                  # radix nodes covering leading full blocks
+    private: list                # physical blocks owned by this request
 
 
 class ServeEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
                  min_bucket: int = 8, attn_impl: str | None = None,
-                 kv_cache: str | None = None):
+                 kv_cache: str | None = None, kv_block_size: int = 0,
+                 prefix_cache: bool = False, n_blocks: int | None = None):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
@@ -53,10 +82,17 @@ class ServeEngine:
             raise ValueError(
                 f"model family {api.cfg.family!r} has no slot-indexed cache "
                 "insert; use repro.serving.bucket.BucketEngine instead")
+        if prefix_cache and not kv_block_size:
+            raise ValueError("prefix_cache requires kv_block_size > 0 "
+                             "(the radix cache shares paged blocks)")
+        if kv_block_size and api.init_paged_cache is None:
+            raise ValueError(
+                f"model {api.cfg.name!r} has no paged cache layout "
+                "(MLA/SSM caches are not paged); use kv_block_size=0")
         self.api, self.params = api, params
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature
-        self.rng = jax.random.PRNGKey(seed)
+        self._seed_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self.queue: list[Request] = []
         self.results: dict[int, list[int]] = {}
@@ -65,17 +101,42 @@ class ServeEngine:
         # slot table: per-slot request (None = free), next token to feed
         self.slots: list[Request | None] = [None] * max_batch
         self.next_tok = np.zeros((max_batch, 1), np.int32)
-        self.caches = api.init_cache(max_batch, max_len)
+
+        self.block_size = int(kv_block_size)
+        self.paged = self.block_size > 0
+        self.prefix_on = bool(prefix_cache)
+        if self.paged:
+            bs = self.block_size
+            self.n_pages = -(-max_len // bs)
+            self.pool_len = self.n_pages * bs
+            # default pool capacity == the slot-contiguous pool's: sharing
+            # then only ever *frees* blocks, so admission can always
+            # succeed once refcount-0 tree blocks are evicted
+            self.n_blocks = (n_blocks if n_blocks is not None
+                             else max_batch * self.n_pages)
+            self.caches = api.init_paged_cache(self.n_blocks, bs,
+                                               max_batch, self.n_pages)
+            self.pool = PrefixPool(self.n_blocks, bs)
+            self._pstate: dict[int, _PagedSlot] = {}
+            self._codec = kvc.get_codec(api.cfg.kv_cache)
+            self._hole_row = np.full((self.n_pages,), self.n_blocks,
+                                     np.int32)
+        else:
+            self.pool_len = max_len
+            self.caches = api.init_cache(max_batch, max_len)
         # public virtual clock (decode steps elapsed): callers scheduling
         # arrivals by step may also fast-forward it across idle gaps, as
         # benchmarks/serve_bench.py does
         self.step_count = 0
         # kv_bytes: resident bytes of the preallocated cache pool — fixed
         # at init (the pool never grows), so the codec trade is visible
-        # next to the throughput numbers
+        # next to the throughput numbers. prefilled_tokens counts tokens
+        # actually run through prefill attention; cached_prompt_tokens
+        # counts prompt tokens served from the radix cache instead.
         self.stats = {"decode_steps": 0, "occupied_slot_steps": 0,
                       "prefills": 0, "admitted": 0, "evictions": 0,
-                      "generated_tokens": 0,
+                      "generated_tokens": 0, "prefilled_tokens": 0,
+                      "cached_prompt_tokens": 0,
                       "kv_bytes": kv_pool_bytes(self.caches)}
         # the pool cache is donated: step/admit immediately rebind
         # self.caches, so XLA can update the (layers, B, T, ...) buffers in
@@ -83,10 +144,39 @@ class ServeEngine:
         self._decode = jax.jit(api.decode, donate_argnums=1)
         self._prefill = jax.jit(
             lambda p, toks, sl: api.prefill(p, {"tokens": toks},
-                                            max_len=max_len, seq_lens=sl))
-        self._insert = jax.jit(api.cache_insert, donate_argnums=0)
+                                            max_len=self.pool_len,
+                                            seq_lens=sl))
+        if self.paged:
+            self._insert_pages = jax.jit(kvc.paged_insert_prefill,
+                                         donate_argnums=0)
+            self._update_slots = jax.jit(kvc.paged_update_slots,
+                                         donate_argnums=0)
+            codec, hd = self._codec, api.cfg.kv_head_dim()
+            self._gather_ctx = jax.jit(
+                lambda caches, pages: kvc.gather_prefix_context(
+                    caches, pages, codec, hd))
+            self._prefill_ctx = jax.jit(
+                lambda p, toks, sl, ctx, cl: api.prefill_ctx(
+                    p, {"tokens": toks}, ctx, cl, max_len=self.pool_len,
+                    seq_lens=sl))
+        else:
+            self._insert = jax.jit(api.cache_insert, donate_argnums=0)
+        seed_key = self._seed_key
 
-    def add_request(self, prompt, max_new: int = 16) -> int:
+        def sample_rows(rids, steps, logits, t):
+            # per-request streams derived inside the jit: one dispatch per
+            # tick, not O(max_batch) host-side fold_in calls
+            def one(rid, step, row):
+                k = jax.random.fold_in(jax.random.fold_in(seed_key, rid),
+                                       step)
+                return jax.random.categorical(k, row / t)
+
+            return jax.vmap(one)(rids, steps, logits).astype(jnp.int32)
+
+        self._sample_rows = jax.jit(sample_rows)
+
+    def add_request(self, prompt, max_new: int = 16,
+                    stop_tokens=()) -> int:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("prompt must contain at least one token")
@@ -98,15 +188,31 @@ class ServeEngine:
                 f"max_len ({self.max_len})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new))
+        self.queue.append(Request(rid, prompt, max_new,
+                                  stop_tokens=frozenset(
+                                      int(t) for t in stop_tokens)))
         return rid
 
-    def _sample(self, logits):
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, logits, reqs):
+        """reqs: one Request (or None for free/dummy rows) per logits row.
+
+        Greedy is a pure argmax. Stochastic sampling draws row r from the
+        request's own stream — fold_in(fold_in(seed, rid), len(out)) — so
+        tokens don't depend on which other rows happen to share the call.
+        Free/dummy rows draw from (rid 0, step 0); their tokens are never
+        read.
+        """
         if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.rng, k = jax.random.split(self.rng)
-        return jax.random.categorical(
-            k, logits / self.temperature, axis=-1).astype(jnp.int32)
+            return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        rids = np.asarray([r.rid if r is not None else 0 for r in reqs],
+                          np.int32)
+        steps = np.asarray([len(r.out) if r is not None else 0
+                            for r in reqs], np.int32)
+        return np.asarray(self._sample_rows(jnp.asarray(rids),
+                                            jnp.asarray(steps), logits,
+                                            float(self.temperature)))
 
     # -- slot lifecycle -----------------------------------------------------
 
@@ -115,9 +221,35 @@ class ServeEngine:
         self.results[r.rid] = r.out
         self.slots[slot] = None
         self.stats["evictions"] += 1
+        if self.paged:
+            st = self._pstate.pop(slot)
+            self.pool.release(st.chain)
+            self.pool.free_blocks(st.private)
+            # neutralize the slot's device table/len *now*: the next decode
+            # tick must not write through a stale row into freed (possibly
+            # reallocated) blocks
+            self.caches = self._update_slots(
+                self.caches, jnp.asarray(self._hole_row[None]),
+                jnp.zeros((1,), jnp.int32),
+                jnp.asarray([slot], jnp.int32))
+
+    def _append_token(self, slot: int, tok: int) -> bool:
+        """Record one generated token; returns True if the request ended
+        (max_new or stop token) and the slot was freed."""
+        r = self.slots[slot]
+        r.out.append(tok)
+        self.next_tok[slot, 0] = tok
+        self.stats["generated_tokens"] += 1
+        if len(r.out) >= r.max_new or tok in r.stop_tokens:
+            self._finish(slot)
+            return True
+        return False
 
     def _admit(self):
         """Prefill queued requests into free slots (one group per bucket)."""
+        if self.paged:
+            self._admit_paged()
+            return
         free = [i for i, r in enumerate(self.slots) if r is None]
         while free and self.queue:
             group = self.sched.select(self.queue, len(free))
@@ -134,7 +266,8 @@ class ServeEngine:
                 lens[j] = len(r.prompt)
             logits, new = self._prefill(self.params, jnp.asarray(toks),
                                         jnp.asarray(lens))
-            nxt = np.asarray(self._sample(logits))
+            rows = list(group) + [None] * (gp - len(group))
+            nxt = self._sample(logits, rows)
             # dummy rows aim past the pool and are dropped by the scatter
             idx = np.full((gp,), self.max_batch, np.int32)
             idx[:len(group)] = free[:len(group)]
@@ -143,13 +276,143 @@ class ServeEngine:
             for j, r in enumerate(group):
                 slot = int(idx[j])
                 self.slots[slot] = r
-                r.out.append(int(nxt[j]))
-                self.next_tok[slot, 0] = nxt[j]
                 self.stats["admitted"] += 1
-                self.stats["generated_tokens"] += 1
-                if len(r.out) >= r.max_new:
-                    self._finish(slot)
+                self.stats["prefilled_tokens"] += len(r.prompt)
+                self._append_token(slot, int(nxt[j]))
             free = [i for i, r in enumerate(self.slots) if r is None]
+
+    # -- paged admission (radix prefix cache) --------------------------------
+
+    def _admit_paged(self):
+        bs = self.block_size
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        while free and self.queue:
+            # longest cached block-prefix per queued request, under the
+            # tree as of *this wave* (earlier waves may have published)
+            chains = {}
+            for r in self.queue:
+                chains[r.rid] = (self.pool.match(r.prompt,
+                                                 clock=self.step_count)
+                                 if self.prefix_on else [])
+
+            def suffix_len(r):
+                return len(r.prompt) - len(chains[r.rid]) * bs
+
+            group = self.sched.select(self.queue, len(free),
+                                      length_of=suffix_len)
+            if not group:
+                break
+            # pin every candidate's matched chain BEFORE any allocation:
+            # alloc-driven LRU eviction only sees refcount-0 nodes, so a
+            # group member's (or the request's own) matched chain can
+            # never be reclaimed out from under the wave
+            for r in group:
+                self.pool.acquire(chains[r.rid])
+            admitted, deferred = [], list(group)
+            while deferred:
+                r = deferred[0]
+                chain = chains[r.rid]
+                ctx_pages = len(chain)
+                need = -(-(len(r.prompt) + r.max_new - 1) // bs) - ctx_pages
+                blocks = self.pool.alloc(need, clock=self.step_count)
+                if blocks is None:
+                    break                      # pool exhausted this wave
+                deferred.pop(0)
+                admitted.append((r, chain, blocks))
+            for r in deferred:                 # not admitted: unpin
+                self.pool.release(chains[r.rid])
+            if not admitted:
+                break
+            for r, _, _ in admitted:
+                self.queue.remove(r)
+            self._prefill_admitted(admitted, free)
+            free = [i for i, r in enumerate(self.slots) if r is None]
+
+    def _prefill_admitted(self, admitted, free):
+        """Suffix-prefill one admitted group into its allocated blocks."""
+        bs = self.block_size
+        group = [r for r, _, _ in admitted]
+        slots = free[:len(group)]
+        blen = bucket_len(max(len(r.prompt) - len(c) * bs
+                              for r, c, _ in admitted), self.buckets)
+        gp = pad_group(len(group))
+        toks = np.zeros((gp, blen), np.int32)
+        lens = np.ones((gp,), np.int32)
+        plens = np.zeros((gp,), np.int32)
+        ctx_lens = np.zeros((gp,), np.int32)
+        rows = np.tile(self._hole_row, (gp, 1))          # (gp, n_pages)
+        dest = np.tile(self._hole_row, (gp, 1))
+        max_ctx_pages = max(len(c) for _, c, _ in admitted)
+        for j, (r, chain, blocks) in enumerate(admitted):
+            ctx_pages = len(chain)
+            suffix = r.prompt[ctx_pages * bs:]
+            toks[j, :len(suffix)] = suffix
+            lens[j] = len(suffix)
+            plens[j] = len(r.prompt)
+            ctx_lens[j] = ctx_pages * bs
+            rows[j, :ctx_pages] = [n.block for n in chain]
+            rows[j, ctx_pages:ctx_pages + len(blocks)] = blocks
+            # suffix-cache page i lands in the slot's page ctx_pages + i
+            n_suffix_pages = self.n_pages - ctx_pages
+            dest[j, :n_suffix_pages] = rows[j, ctx_pages:]
+        if max_ctx_pages == 0:
+            logits, new = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lens))
+        else:
+            # pad the gathered context to a power-of-two page bucket so
+            # compile variants stay O(buckets), not O(distinct lengths)
+            pb = 1
+            while pb < max_ctx_pages:
+                pb *= 2
+            ctx_tab = np.zeros((gp, pb), np.int32)
+            for j, (_, chain, _) in enumerate(admitted):
+                ctx_tab[j, :len(chain)] = [n.block for n in chain]
+            ctx = self._gather_ctx(self.caches, jnp.asarray(ctx_tab))
+            logits, new = self._prefill_ctx(self.params, jnp.asarray(toks),
+                                            jnp.asarray(lens), ctx,
+                                            jnp.asarray(ctx_lens))
+        row_reqs = list(group) + [None] * (gp - len(group))
+        nxt = self._sample(logits, row_reqs)
+        self.caches = self._insert_pages(self.caches, new,
+                                         jnp.asarray(dest))
+        # padded to the group's power-of-two size like every other
+        # admission op (one compile per log group size, not per size);
+        # dummy rows aim past the pool and drop
+        slot_idx = np.full((gp,), self.max_batch, np.int32)
+        slot_idx[:len(group)] = slots
+        self.caches = self._update_slots(self.caches, jnp.asarray(rows),
+                                         jnp.asarray(plens),
+                                         jnp.asarray(slot_idx))
+        self.stats["prefills"] += 1
+        for j, (r, chain, blocks) in enumerate(admitted):
+            slot = slots[j]
+            self.slots[slot] = r
+            st = _PagedSlot(plen=len(r.prompt), row=rows[j], chain=chain,
+                            private=list(blocks))
+            self._pstate[slot] = st
+            self.stats["admitted"] += 1
+            self.stats["prefilled_tokens"] += int(lens[j])
+            self.stats["cached_prompt_tokens"] += int(ctx_lens[j])
+            self.pool.record_hit(chain)
+            if self.prefix_on:
+                # publish the prompt's full blocks beyond the matched
+                # prefix, so requests admitted from the next wave on share
+                # them (same-wave requests prefilled independently)
+                for pi in range(len(chain), len(r.prompt) // bs):
+                    self._publish_block(st, pi, r)
+            self._append_token(slot, int(nxt[j]))
+
+    def _publish_block(self, st: _PagedSlot, pi: int, r: Request):
+        """Hang slot page pi (now full and immutable) on the radix tree."""
+        seq = r.prompt if pi * self.block_size + self.block_size <= st.plen \
+            else np.concatenate([r.prompt, np.asarray(r.out, np.int32)])
+        tokens = seq[pi * self.block_size:(pi + 1) * self.block_size]
+        parent = st.chain[-1] if st.chain else None
+        node, owned = self.pool.publish(parent, tokens, int(st.row[pi]),
+                                        clock=self.step_count)
+        if owned:
+            st.private.remove(int(st.row[pi]))
+        st.chain.append(node)
 
     # -- engine ticks -------------------------------------------------------
 
@@ -162,17 +425,20 @@ class ServeEngine:
             return False
         logits, self.caches = self._decode(self.params, self.caches,
                                            jnp.asarray(self.next_tok))
-        nxt = np.asarray(self._sample(logits))
+        nxt = self._sample(logits, list(self.slots))
         self.step_count += 1
         self.stats["decode_steps"] += 1
         self.stats["occupied_slot_steps"] += len(active)
         for i in active:
             r = self.slots[i]
-            r.out.append(int(nxt[i]))
-            self.next_tok[i, 0] = nxt[i]
-            self.stats["generated_tokens"] += 1
-            if len(r.out) >= r.max_new:
-                self._finish(i)
+            if self.paged and self.prefix_on:
+                # the decode just inserted K/V at position plen+len(out)-1;
+                # publish the block it completed, if any
+                st = self._pstate[i]
+                cur = st.plen + len(r.out)       # cache len after this tick
+                if cur % self.block_size == 0:
+                    self._publish_block(st, cur // self.block_size - 1, r)
+            self._append_token(i, int(nxt[i]))
         return True
 
     def run(self) -> dict[int, list[int]]:

@@ -88,12 +88,13 @@ def cache_insert_slots(pool, new, slots):
 
 
 def kv_pool_bytes(caches) -> int:
-    """Resident bytes of a cache pytree, excluding the tiny ``len`` leaves
-    (so the number is directly comparable to bytes_per_token * tokens)."""
+    """Resident bytes of a cache pytree, excluding the tiny ``len`` /
+    ``table`` index leaves (so the number is directly comparable to
+    bytes_per_token * tokens)."""
     total = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
         key = getattr(path[-1], "key", None)
-        if key == "len":
+        if key in ("len", "table"):
             continue
         total += leaf.size * jnp.dtype(leaf.dtype).itemsize
     return total
@@ -244,10 +245,10 @@ class CacheCodec:
         """Resident cache bytes per token per layer (k and v together)."""
         raise NotImplementedError
 
-    # --- hooks for the fused decode path (quantized codecs) ---
+    # --- hooks for the fused decode paths (quantized and paged pools) ---
 
     def encoded_leaves(self, cache):
-        return {k: v for k, v in cache.items() if k != "len"}
+        return {k: v for k, v in cache.items() if k not in ("len", "table")}
 
     def n_kv(self, cache):
         raise NotImplementedError
@@ -281,6 +282,14 @@ class Bf16Codec(CacheCodec):
         return attn_lib.decode_attention(q, cache["k"], cache["v"],
                                          kv_len=cache["len"], scale=scale,
                                          impl=impl)
+
+    def n_kv(self, cache):
+        return cache["k"].shape[2]
+
+    def dequant_block(self, blk, d):
+        # stored dtype passes straight through: the paged decode / context
+        # gather read exactly the bytes the insert wrote
+        return blk["k"], blk["v"]
 
     def bytes_per_token(self, n_kv, head_dim):
         return 2 * n_kv * head_dim * 2
@@ -379,3 +388,180 @@ _CODECS = {"bf16": Bf16Codec(), "int8": Int8Codec(), "binary": BinaryCodec()}
 def get_codec(name: str = "auto") -> CacheCodec:
     """Resolve a ``ModelConfig.kv_cache`` value ("auto" -> bf16)."""
     return _CODECS[attn_lib.resolve_kv_cache(name)]
+
+
+# ---------------------------------------------------------------------------
+# paged pool: a shared block pool + per-slot block tables
+#
+# The slot-contiguous pool above gives every slot a private (max_len, H, D)
+# region; the paged pool replaces that with one shared pool of fixed-size
+# blocks, (n_blocks, block_size, H, D) per layer in any codec's encoded
+# layout, plus two index leaves per layer:
+#
+#   table (max_batch, n_pages) int32   physical block id per (slot, page);
+#                                      entries >= n_blocks are holes (free
+#                                      slots / pages past the allocation)
+#   len   (max_batch,)         int32   valid tokens per slot, as before
+#
+# Physical blocks are position-agnostic (RoPE is applied before insert), so
+# any slot's page j may live in any physical block — which is what lets the
+# radix prefix cache (serving/prefix.py) point many slots' leading pages at
+# the same blocks. Detection is structural: a cache dict with a "table"
+# leaf is paged, so models (lm_common.gqa_decode) and the engine never
+# thread an extra flag.
+# ---------------------------------------------------------------------------
+
+def init_paged(codec: CacheCodec, n_blocks: int, block_size: int, n_kv: int,
+               head_dim: int, max_batch: int, n_pages: int,
+               dtype=jnp.bfloat16):
+    """One layer's paged pool: codec-encoded block leaves + table/len.
+
+    Reuses ``codec.init`` with (batch=n_blocks, max_len=block_size): every
+    codec's encoded leaves carry time on axis 1, so a stack of blocks is
+    just a batch of short sequences as far as the codec is concerned."""
+    one = codec.init(n_blocks, block_size, n_kv, head_dim, dtype)
+    one.pop("len")
+    one["table"] = jnp.full((max_batch, n_pages), n_blocks, jnp.int32)
+    one["len"] = jnp.zeros((max_batch,), jnp.int32)
+    return one
+
+
+def paged_block_size(cache) -> int:
+    """Block size of a paged per-layer cache: every codec's values leaf is
+    (n_blocks, block_size, Hkv, ...), so take the deepest encoded leaf
+    (scale leaves are one rank lower) and read its time axis."""
+    leaf = max((v for k, v in cache.items() if k not in ("len", "table")),
+               key=lambda a: a.ndim)
+    return leaf.shape[1]
+
+
+def paged_update_slots(pool, rows, lens, slots):
+    """Rebind slots' block tables and lengths (admission / eviction).
+
+    pool: full caches dict {seg: {...}} with per-segment table leaves
+    (count, max_batch, n_pages); rows (G, n_pages) int32 physical ids
+    (holes >= n_blocks); lens (G,); slots (G,) int32, out-of-range dropped
+    (same padded-group contract as cache_insert_slots)."""
+    out = {}
+    for name, seg in pool.items():
+        seg = dict(seg)
+        seg["table"] = seg["table"].at[:, slots].set(rows, mode="drop")
+        seg["len"] = seg["len"].at[:, slots].set(lens, mode="drop")
+        out[name] = seg
+    return out
+
+
+def paged_insert_prefill(pool, new, dest_pages):
+    """Scatter a prefill's codec-encoded caches into physical blocks.
+
+    new is the ordinary contiguous prefill cache pytree (leaves
+    (count, G, T, ...) with T = n_pages * block_size); each request row's
+    time axis is cut into pages and page i is written to physical block
+    dest_pages[g, i]. Holes (>= n_blocks) drop — that is how the engine
+    (a) skips pages already covered by a shared cached prefix and (b) pads
+    prefill groups. The ``len`` leaves of ``new`` are discarded; slot
+    lengths are owned by paged_update_slots."""
+    out = {}
+    for name, seg in pool.items():
+        seg = dict(seg)
+        for leaf_name, src in new[name].items():
+            if leaf_name == "len":
+                continue
+            dst = seg[leaf_name]
+            bs = dst.shape[2]
+            count, g, t = src.shape[:3]
+            src_p = src.reshape(count, g, t // bs, bs, *src.shape[3:])
+            seg[leaf_name] = dst.at[:, dest_pages].set(
+                src_p.astype(dst.dtype), mode="drop")
+        out[name] = seg
+    return out
+
+
+def paged_insert_timestep(cache, k_new, v_new, codec: CacheCodec):
+    """Per-layer decode insert: encode one token per slot and write it at
+    (table[b, len // bs], len % bs). Free slots hit table holes and drop.
+    The scatter is an elementwise .at[] gather-write, which partitions like
+    the "mask" method (no per-batch dynamic slice start)."""
+    idx = cache["len"]                                  # (B,)
+    bs = paged_block_size(cache)
+    page = idx // bs
+    off = idx - page * bs
+    phys = jnp.take_along_axis(cache["table"], page[:, None], axis=1)[:, 0]
+    out = dict(cache)
+    for name, new in codec.encode(k_new, v_new).items():
+        buf = cache[name]
+        out[name] = buf.at[phys, off].set(new[:, 0].astype(buf.dtype),
+                                          mode="drop")
+    out["len"] = idx + 1
+    return out
+
+
+def paged_decode_attention(q, cache, codec: CacheCodec, *, scale=None):
+    """Single-query attention through the block table: the same blockwise
+    online-softmax recurrence as _fused_quant_decode, with the per-step
+    contiguous time slice replaced by a gather of each slot's page-jk
+    physical block — one (B, block_size, Hkv, D) tile live per step,
+    dequantized (for quantized codecs) inside the block load."""
+    b, s, hq, d = q.shape
+    enc = codec.encoded_leaves(cache)
+    table = cache["table"]                              # (B, n_pages)
+    n_pages = table.shape[1]
+    n_blocks = next(iter(enc.values())).shape[0]
+    bs_blk = paged_block_size(cache)
+    hkv = codec.n_kv(cache)
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = jnp.minimum(cache["len"].astype(jnp.int32), n_pages * bs_blk)
+
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+
+    def one_page(carry, jk):
+        num, den, m_prev = carry
+        # hole entries (>= n_blocks) clamp to an arbitrary real block; its
+        # columns sit past kv_len for that slot, so they mask to NEG_INF
+        phys = jnp.minimum(table[:, jk], n_blocks - 1)
+        blk = {name: leaf[phys] for name, leaf in enc.items()}
+        k_blk, v_blk = codec.dequant_block(blk, d)      # (B, bs, Hkv, D)
+        sij = jnp.einsum("bshgd,bkhd->bhgsk", qg, k_blk,
+                         preferred_element_type=jnp.float32) * scale
+        cols = jk * bs_blk + jnp.arange(bs_blk)
+        valid = (cols[None, :] < kv_len[:, None])[:, None, None, None, :]
+        sij = jnp.where(valid, sij, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(sij, -1))   # (B, Hkv, G, S)
+        p = jnp.exp(sij - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        den = den * alpha + jnp.sum(p, -1)
+        num = num * alpha[..., None] + jnp.einsum(
+            "bhgsk,bkhd->bhgsd", p, v_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (num, den, m_cur), None
+
+    init = (jnp.zeros((b, hkv, g, s, d), jnp.float32),
+            jnp.zeros((b, hkv, g, s), jnp.float32),
+            jnp.full((b, hkv, g, s), NEG_INF, jnp.float32))
+    (num, den, _), _ = jax.lax.scan(one_page, init, jnp.arange(n_pages))
+    den = jnp.where(den == 0.0, 1.0, den)
+    out = num / den[..., None]                          # (B, Hkv, G, S, D)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, hq, d).astype(q.dtype)
+
+
+def gather_prefix_context(pool, ctx_pages, codec: CacheCodec, head_dim: int):
+    """Materialize cached-prefix K/V for suffix prefill.
+
+    ctx_pages (G, P) physical block ids (host-clamped into range; rows with
+    fewer matched pages repeat block 0, masked downstream by ctx_len).
+    Returns {seg: {"k", "v"}} with leaves (count, G, P * block_size, Hkv,
+    D) — decoded through the codec once per admission, bounded by the
+    context-page bucket, never the whole pool."""
+    out = {}
+    for name, seg in pool.items():
+        enc = {k: v for k, v in seg.items() if k not in ("len", "table")}
+        resh = {}
+        for leaf_name, leaf in enc.items():
+            ga = jnp.take(leaf, ctx_pages, axis=1)  # (count, G, P, bs, ...)
+            resh[leaf_name] = ga.reshape(ga.shape[0], ga.shape[1],
+                                         ga.shape[2] * ga.shape[3],
+                                         *ga.shape[4:])
+        k, v = codec.dequant_block(resh, head_dim)
+        out[name] = {"k": k, "v": v}
+    return out

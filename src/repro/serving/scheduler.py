@@ -27,6 +27,9 @@ class Request:
     prompt: np.ndarray          # (S,) int32
     max_new: int
     out: list = dataclasses.field(default_factory=list)
+    # generation stops after a sampled token lands in this set (the token is
+    # kept in out, EOS-style); empty = run to max_new
+    stop_tokens: frozenset = frozenset()
 
 
 def make_buckets(max_len: int, *, min_bucket: int = 8) -> tuple[int, ...]:
@@ -68,13 +71,20 @@ class FifoScheduler:
     def __init__(self, buckets: tuple[int, ...]):
         self.buckets = buckets
 
-    def select(self, queue: list[Request], n_free: int) -> list[Request]:
-        """Pick up to n_free requests sharing the queue head's bucket."""
+    def select(self, queue: list[Request], n_free: int,
+               length_of=None) -> list[Request]:
+        """Pick up to n_free requests sharing the queue head's bucket.
+
+        length_of maps a request to the length that gets padded at prefill
+        — len(prompt) by default; the prefix-cached engine passes the
+        *un-cached suffix* length, so requests whose prompts differ wildly
+        but share a cached header still batch together."""
         if not queue or n_free <= 0:
             return []
-        head_bucket = bucket_len(len(queue[0].prompt), self.buckets)
+        length_of = length_of or (lambda r: len(r.prompt))
+        head_bucket = bucket_len(length_of(queue[0]), self.buckets)
         group = [r for r in queue
-                 if bucket_len(len(r.prompt), self.buckets) == head_bucket]
+                 if bucket_len(length_of(r), self.buckets) == head_bucket]
         return group[:n_free]
 
 
@@ -94,4 +104,35 @@ def poisson_workload(n: int, *, rate: float, prompt_lens=(8, 12, 16),
         prompt = rng.integers(0, vocab, plen).astype(np.int32)
         mn = int(rng.integers(max_new[0], max_new[1] + 1))
         out.append((int(t), prompt, mn))
+    return out
+
+
+def prefix_workload(n: int, *, header_len: int = 128,
+                    suffix_lens=(8, 12, 16), rate: float = 0.5,
+                    max_new=(8, 16), vocab: int = 256, seed: int = 0,
+                    token_source=None):
+    """The multi-user chat shape: every prompt = one shared ``header_len``
+    token header (system prompt / few-shot block) + a short unique suffix,
+    Poisson arrivals. This is the workload the radix prefix cache converts
+    from O(prompt) to O(suffix) prefill — after the first request publishes
+    the header blocks, later arrivals re-prefill only their suffix.
+
+    token_source(rng, n) -> (n,) int32 overrides the uniform token draw
+    (benchmarks pass a generator matched to their trained model's data
+    distribution so greedy argmax margins stay decisive).
+
+    Returns [(arrival_step, prompt, max_new)] sorted by arrival.
+    """
+    rng = np.random.default_rng(seed)
+    draw = token_source or (
+        lambda rng_, k: rng_.integers(0, vocab, k).astype(np.int32))
+    header = draw(rng, header_len)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        slen = int(rng.choice(suffix_lens))
+        suffix = draw(rng, slen)
+        mn = int(rng.integers(max_new[0], max_new[1] + 1))
+        out.append((int(t), np.concatenate([header, suffix]), mn))
     return out

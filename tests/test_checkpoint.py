@@ -48,3 +48,47 @@ def test_async_save(tmp_path):
 def test_atomicity_no_partial_dirs(tmp_path):
     C.save(str(tmp_path), 1, _tree())
     assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_overlapping_async_saves_same_step(tmp_path):
+    """Regression: overlapping save_async calls for the same step used to
+    share a tmp dir keyed only by (step, pid) — one writer renamed/deleted
+    `.tmp_step_N_PID` while another was mid-write, surfacing as a
+    background-thread FileNotFoundError that only pytest's thread-exception
+    warning (now promoted to an error in pyproject.toml) ever reported.
+    With per-call-unique staging dirs every writer completes cleanly, the
+    published step_N is always a complete checkpoint, and no staging
+    leftovers survive."""
+    big = {"w": jnp.zeros((512, 512), jnp.float32)}  # widen the race window
+    for _ in range(4):
+        threads = [C.save_async(str(tmp_path), 5, big) for _ in range(4)]
+        for t in threads:
+            t.join(timeout=30)
+            assert not t.is_alive()
+    assert C.latest_step(str(tmp_path)) == 5
+    got, meta = C.restore(str(tmp_path), 5, big)
+    assert meta["step"] == 5
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.zeros((512, 512)))
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".")]
+    assert not leftovers, leftovers
+
+
+def test_wait_for_saves_joins_outstanding(tmp_path):
+    for s in (1, 2, 3):
+        C.save_async(str(tmp_path), s, _tree(s))
+    C.wait_for_saves(timeout=30)
+    assert C.latest_step(str(tmp_path)) == 3
+
+
+def test_scans_tolerate_stray_names(tmp_path):
+    """latest_step/_gc must skip anything that is not a step_<int> dir:
+    staging dirs, trash dirs from an interrupted publish, stray files."""
+    C.save(str(tmp_path), 2, _tree())
+    (tmp_path / "step_garbage").mkdir()
+    (tmp_path / ".tmp_step_9_123_0").mkdir()
+    (tmp_path / ".old_step_2_99_1").mkdir()
+    (tmp_path / "notes.txt").write_text("x")
+    assert C.latest_step(str(tmp_path)) == 2
+    C.save(str(tmp_path), 3, _tree(), keep_last=1)    # _gc runs over strays
+    assert C.latest_step(str(tmp_path)) == 3
+    assert C.latest_step(str(tmp_path / "missing")) is None

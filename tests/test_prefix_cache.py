@@ -1,0 +1,304 @@
+"""Radix prefix cache over the paged KV pool: pure-Python radix/allocator
+semantics, and greedy token-parity of the prefix-cached engine against the
+uncached slot engine across sharing patterns and cache codecs.
+
+Parity tests run on a briefly trained f32 smoke LM (same recipe as
+tests/test_kvcache.py): token-identity claims only mean something once the
+model's greedy argmax gaps sit above fp-reorder noise — the paged decode
+walks the cache in block_size tiles instead of one contiguous slice, which
+reorders the softmax reductions by a few ULPs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import PrecisionPolicy
+from repro.models import get_model
+from repro.serving import ServeEngine
+from repro.serving.prefix import PrefixPool
+
+
+# ---------------------------------------------------------------------------
+# radix tree / allocator semantics (no model)
+# ---------------------------------------------------------------------------
+
+def test_match_is_block_aligned_and_capped():
+    pool = PrefixPool(n_blocks=8, block_size=4)
+    toks = np.arange(12)
+    b0 = pool.alloc(1)[0]
+    n0, owned = pool.publish(None, toks[:4], b0)
+    assert owned
+    b1 = pool.alloc(1)[0]
+    n1, _ = pool.publish(n0, toks[4:8], b1)
+    # mid-block overlap: only full blocks match
+    assert pool.match(np.arange(7)) == [n0]
+    assert pool.match(np.arange(11)) == [n0, n1]
+    # fully-cached prompt: the last block is dropped so >= 1 token prefills
+    assert pool.match(np.arange(8)) == [n0]
+    assert pool.match(np.arange(4)) == []      # 4-token prompt, 1-block match
+    #                                            would leave an empty suffix
+
+
+def test_publish_dedup_keeps_duplicate_private():
+    pool = PrefixPool(n_blocks=4, block_size=2)
+    a, b = pool.alloc(2)
+    n1, owned1 = pool.publish(None, [5, 6], a)
+    n2, owned2 = pool.publish(None, [5, 6], b)
+    assert owned1 and not owned2 and n1 is n2
+    assert n1.ref == 2                          # both publishers hold refs
+
+
+def test_refcount_blocks_eviction_lru_frees_leaves():
+    pool = PrefixPool(n_blocks=3, block_size=2)
+    blocks = pool.alloc(3)
+    n0, _ = pool.publish(None, [1, 2], blocks[0], clock=0)
+    n1, _ = pool.publish(n0, [3, 4], blocks[1], clock=1)
+    na, _ = pool.publish(None, [9, 9], blocks[2], clock=2)
+    # all referenced: nothing evictable, alloc must fail without corruption
+    assert pool.alloc(1) is None
+    # release the deep chain; leaves evict before parents, LRU first
+    pool.release([n0, n1])
+    got = pool.alloc(2)
+    assert sorted(got) == sorted([blocks[0], blocks[1]])
+    assert pool.stats["evicted_blocks"] == 2
+    assert pool.match([1, 2, 3]) == []          # chain gone
+    assert na.ref == 1                          # survivor untouched
+
+
+def test_release_underflow_asserts():
+    pool = PrefixPool(n_blocks=2, block_size=2)
+    b = pool.alloc(1)[0]
+    n, _ = pool.publish(None, [1, 2], b)
+    pool.release([n])
+    with pytest.raises(AssertionError):
+        pool.release([n])
+
+
+# ---------------------------------------------------------------------------
+# engine parity (trained smoke LM)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained_model():
+    from repro.data.synthetic import SyntheticTokens
+    from repro.optim import adamw_init
+    from repro.train.step import make_train_step
+
+    cfg = smoke_config("stablelm-3b").replace(
+        policy=PrecisionPolicy(), compute_dtype="float32",
+        param_dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(api, cfg, peak_lr=1e-3, warmup=20,
+                                   total=200))
+    data = SyntheticTokens(cfg.vocab, 32, 16, seed=0)
+    for _, batch in zip(range(200), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, _ = step(params, opt, batch)
+    return cfg, api, params
+
+
+def _markov(start, n, vocab):
+    out, x = [], start
+    for _ in range(n):
+        out.append(x)
+        x = (x * 7 + 13) % vocab
+    return np.asarray(out, np.int32)
+
+
+def _serve(api, params, prompts, *, max_new=6, staggered=False, **eng_kw):
+    eng = ServeEngine(api, params, max_batch=2, max_len=64, **eng_kw)
+    if staggered:
+        # run the first request to completion before the rest arrive, so
+        # its published blocks are matchable (same-wave admissions prefill
+        # independently by design)
+        rids = [eng.add_request(prompts[0], max_new=max_new)]
+        eng.run()
+        rids += [eng.add_request(p, max_new=max_new) for p in prompts[1:]]
+    else:
+        rids = [eng.add_request(p, max_new=max_new) for p in prompts]
+    results = eng.run()
+    return [results[r] for r in rids], eng
+
+
+def test_shared_header_greedy_parity(trained_model):
+    """Shared-system-prompt batch: prefix-cached outputs must be
+    token-identical to the uncached engine, while actually hitting."""
+    cfg, api, params = trained_model
+    header = _markov(3, 24, cfg.vocab)
+    prompts = [np.concatenate([header, _markov(50 + i, 6, cfg.vocab)])
+               for i in range(5)]
+    want, _ = _serve(api, params, prompts, staggered=True)
+    got, eng = _serve(api, params, prompts, staggered=True,
+                      kv_block_size=8, prefix_cache=True)
+    assert got == want
+    # 4 later arrivals x 24 header tokens (3 full blocks of 8) from cache
+    assert eng.stats["cached_prompt_tokens"] == 4 * 24
+    assert eng.pool.stats["hits"] == 4
+
+
+def test_partial_overlap_mid_block(trained_model):
+    """Prompts diverging mid-block share only the full blocks before the
+    split; outputs still match the uncached engine exactly."""
+    cfg, api, params = trained_model
+    common = _markov(5, 21, cfg.vocab)          # 21 = 2 full blocks of 8 + 5
+    prompts = [np.concatenate([common, _markov(80 + i, 7, cfg.vocab)])
+               for i in range(3)]
+    want, _ = _serve(api, params, prompts, staggered=True)
+    got, eng = _serve(api, params, prompts, staggered=True,
+                      kv_block_size=8, prefix_cache=True)
+    assert got == want
+    # only the 2 complete blocks (16 tokens) of the 21-token overlap match
+    assert eng.stats["cached_prompt_tokens"] == 2 * 16
+
+
+def test_refcounted_blocks_survive_sharer_eviction(trained_model):
+    """A finishing early while B still decodes through the shared header:
+    B's refs keep the blocks alive; after both finish the tree retains the
+    published chain and every block is accounted for (tree + free =
+    pool)."""
+    cfg, api, params = trained_model
+    header = _markov(7, 16, cfg.vocab)
+    a = np.concatenate([header, _markov(90, 4, cfg.vocab)])
+    b = np.concatenate([header, _markov(91, 5, cfg.vocab)])
+
+    solo_a, _ = _serve(api, params, [a], max_new=2)
+    solo_b, _ = _serve(api, params, [b], max_new=12)
+
+    eng = ServeEngine(api, params, max_batch=2, max_len=64,
+                      kv_block_size=8, prefix_cache=True)
+    ra = eng.add_request(a, max_new=2)          # publishes the header...
+    eng.run()
+    rb = eng.add_request(b, max_new=12)         # ...then B shares it
+    eng.step()
+    shared = [n for n in eng.pool._walk() if n.ref > 0]
+    assert shared, "B should hold refs on the shared header chain"
+    results = eng.run()
+    assert results[ra] == solo_a[0]
+    assert results[rb] == solo_b[0]
+    # all slots free: every tree node is refcount-0 (evictable), and
+    # blocks partition exactly into tree-owned + free
+    assert all(n.ref == 0 for n in eng.pool._walk())
+    assert eng.pool.tree_blocks() + len(eng.pool.free) == eng.n_blocks
+
+
+def test_int8_codec_on_paged_pool(trained_model):
+    """int8 stores through the paged pool: prefix-cached greedy outputs
+    match the *same-codec* uncached engine token for token (suffix prefill
+    attends the dequantized int8 context; the trained model's argmax
+    margins dominate that error exactly as they do on the decode path)."""
+    cfg, api, params = trained_model
+    header = _markov(11, 16, cfg.vocab)
+    prompts = [np.concatenate([header, _markov(60 + i, 6, cfg.vocab)])
+               for i in range(4)]
+    want, _ = _serve(api, params, prompts, staggered=True, kv_cache="int8")
+    got, eng = _serve(api, params, prompts, staggered=True, kv_cache="int8",
+                      kv_block_size=8, prefix_cache=True)
+    assert got == want
+    assert eng.stats["cached_prompt_tokens"] == 3 * 16
+
+
+def test_binary_codec_on_paged_pool(trained_model):
+    """binary is the documented-lossy codec (tests/test_kvcache.py): its
+    quantization error sits at a large fraction of the logit scale, so
+    attending suffix prefill through the binary-dequantized context may
+    legitimately flip near-tie tokens. The paged *pool* itself must still
+    be exact: with the prefix cache off (full prefill, same block-table
+    decode), outputs match the contiguous binary engine token for token;
+    with it on, requests complete and hit the cache."""
+    cfg, api, params = trained_model
+    header = _markov(11, 16, cfg.vocab)
+    prompts = [np.concatenate([header, _markov(60 + i, 6, cfg.vocab)])
+               for i in range(4)]
+    want, _ = _serve(api, params, prompts, staggered=True,
+                     kv_cache="binary")
+    got, _ = _serve(api, params, prompts, staggered=True, kv_cache="binary",
+                    kv_block_size=8)
+    assert got == want
+    pre, eng = _serve(api, params, prompts, staggered=True,
+                      kv_cache="binary", kv_block_size=8, prefix_cache=True)
+    assert eng.stats["cached_prompt_tokens"] == 3 * 16
+    # the first (staggered, cache-cold) request never attends a quantized
+    # context, so even under the lossy codec it is token-identical
+    assert pre[0] == want[0]
+    assert [len(o) for o in pre] == [len(o) for o in want]
+
+
+def test_eviction_under_pressure_stays_correct(trained_model):
+    """A pool with barely enough blocks forces the allocator to evict
+    published refcount-0 chains between waves; outputs are unaffected."""
+    cfg, api, params = trained_model
+    groups = []
+    for h in range(3):                          # 3 distinct headers
+        header = _markov(30 + h, 16, cfg.vocab)
+        groups += [np.concatenate([header, _markov(70 + 10 * h + i, 5,
+                                                   cfg.vocab)])
+                   for i in range(2)]
+    want, _ = _serve(api, params, groups, staggered=True)
+    # n_blocks = exactly the worst-case active working set (2 slots x 4
+    # pages): every published chain beyond that must be evicted to admit
+    eng = ServeEngine(api, params, max_batch=2, max_len=64,
+                      kv_block_size=8, prefix_cache=True, n_blocks=8)
+    rids = [eng.add_request(groups[0], max_new=6)]
+    eng.run()
+    rids += [eng.add_request(p, max_new=6) for p in groups[1:]]
+    results = eng.run()
+    assert [results[r] for r in rids] == want
+    assert eng.pool.stats["evicted_blocks"] > 0
+
+
+def test_matched_chain_pinned_before_allocation(trained_model):
+    """Regression: admission must acquire a matched chain *before* its own
+    block allocation — alloc-driven LRU eviction could otherwise reclaim a
+    refcount-0 chain the request was about to attend through, handing its
+    physical blocks to the request's own suffix. Pool sized so the only
+    evictable blocks while A decodes are B's matched header chain: B must
+    defer (not corrupt) until A releases, and still decode exactly."""
+    cfg, api, params = trained_model
+    header = _markov(13, 16, cfg.vocab)             # 2 blocks of 8
+    b_prompt = np.concatenate([header, _markov(95, 15, cfg.vocab)])
+    solo_b, _ = _serve(api, params, [b_prompt], max_new=8)
+
+    eng = ServeEngine(api, params, max_batch=2, max_len=64,
+                      kv_block_size=8, prefix_cache=True, n_blocks=8)
+    # publish the header chain (ref drops to 0 when this finishes)
+    eng.add_request(np.concatenate([header, _markov(94, 5, cfg.vocab)]),
+                    max_new=2)
+    eng.run()
+    # A occupies 4 of the 6 remaining blocks for its whole lifetime
+    ra = eng.add_request(_markov(96, 12, cfg.vocab), max_new=18)
+    eng.step()
+    # B matches the (refcount-0) header chain and needs 3 blocks; only 2
+    # are free, and the sole evictable blocks are B's own matched chain
+    rb = eng.add_request(b_prompt, max_new=8)
+    eng.step()
+    # whether B was admitted or deferred, the pool must stay consistent:
+    # no slot references a physical block twice (ctx page == suffix page
+    # is exactly the corruption the pinning prevents), and every chain
+    # node is still attached to the tree
+    for st in eng._pstate.values():
+        real = [int(x) for x in st.row if x < eng.n_blocks]
+        assert len(real) == len(set(real)), real
+        for n in st.chain:
+            assert n.parent.children.get(n.tokens) is n
+    results = eng.run()
+    assert results[rb] == solo_b[0]
+    assert len(results[ra]) == 18
+
+
+def test_paged_requires_gqa_and_block_size():
+    cfg = smoke_config("minicpm3-4b")           # MLA family
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged|MLA"):
+        ServeEngine(api, params, max_batch=2, max_len=32, kv_block_size=8)
+    cfg2 = smoke_config("stablelm-3b")
+    api2 = get_model(cfg2)
+    params2 = api2.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeEngine(api2, params2, max_batch=2, max_len=32,
+                    prefix_cache=True)

@@ -95,6 +95,56 @@ def test_arrivals_between_runs(model):
     assert len(second[r2]) == 4
 
 
+def test_sampled_tokens_independent_of_traffic(model):
+    """Determinism regression: with temperature > 0 the engine used to
+    burn one pool-wide RNG split per call (free slots and dummy prefill
+    rows included), so a request's sampled tokens changed with unrelated
+    traffic, admission batching, and pool size. Per-request streams make
+    the output a function of (params, prompt, seed, rid) only."""
+    cfg, api, params = model
+    prompt = np.arange(7)
+    solo = ServeEngine(api, params, max_batch=2, max_len=64,
+                       temperature=0.8, seed=5)
+    r_solo = solo.add_request(prompt, max_new=8)    # rid 0
+    want = solo.run()[r_solo]
+
+    from repro.serving.scheduler import poisson_workload
+    busy = ServeEngine(api, params, max_batch=4, max_len=64,
+                       temperature=0.8, seed=5)
+    r_busy = busy.add_request(prompt, max_new=8)    # rid 0, same stream
+    for _, p, mn in poisson_workload(6, rate=2.0, vocab=cfg.vocab, seed=3):
+        busy.add_request(p, max_new=mn)
+    assert busy.run()[r_busy] == want
+
+
+def _greedy_solo(api, params, prompt, max_new):
+    eng = ServeEngine(api, params, max_batch=2, max_len=64)
+    rid = eng.add_request(prompt, max_new=max_new)
+    return eng.run()[rid]
+
+
+def test_stop_tokens_evict_early(model):
+    cfg, api, params = model
+    base = _greedy_solo(api, params, np.arange(6), 10)
+    assert len(base) == 10
+    stop = base[3]
+    k = base.index(stop)                        # first occurrence wins
+    eng = ServeEngine(api, params, max_batch=2, max_len=64)
+    rid = eng.add_request(np.arange(6), max_new=10, stop_tokens={stop})
+    out = eng.run()[rid]
+    assert out == base[:k + 1]                  # stop token kept, then cut
+    assert eng.stats["evictions"] == 1
+
+
+def test_stop_token_on_prefill_sampled_first_token(model):
+    cfg, api, params = model
+    base = _greedy_solo(api, params, np.arange(6), 10)
+    eng = ServeEngine(api, params, max_batch=2, max_len=64)
+    rid = eng.add_request(np.arange(6), max_new=10, stop_tokens={base[0]})
+    assert eng.run()[rid] == [base[0]]          # never occupies a decode slot
+    assert eng.stats["decode_steps"] == 0
+
+
 @pytest.mark.parametrize("cls", [ServeEngine, BucketEngine])
 def test_bad_requests_rejected(model, cls):
     """Both engines validate identically (the launcher swaps them freely)."""
