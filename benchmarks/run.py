@@ -9,13 +9,13 @@ def main() -> None:
                     help="long versions (more epochs, bigger shapes)")
     ap.add_argument("--only", default="",
                     help="comma list: tables,fig2,kernels,attn,roofline,"
-                         "serve,prefix,kvcache")
+                         "serve,prefix,kvcache,spec")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import attn_bench, beanna_tables, fig2_training, \
-        kernel_bench, kvcache_bench, roofline, serve_bench
+        kernel_bench, kvcache_bench, roofline, serve_bench, spec_bench
 
     suites = [
         ("tables", beanna_tables.run),
@@ -26,6 +26,7 @@ def main() -> None:
         ("serve", serve_bench.run),
         ("prefix", serve_bench.run_prefix),
         ("kvcache", kvcache_bench.run),
+        ("spec", spec_bench.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

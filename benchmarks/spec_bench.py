@@ -1,0 +1,128 @@
+"""Speculative decoding: binary-draft waves vs the plain one-token tick.
+
+The trained smoke LM serves the same greedy workload twice — once through
+the plain slot engine (one target pass per token) and once through
+draft/verify waves (``spec_k`` binary-mode draft passes + one multi-token
+float verify per wave). Outputs are asserted token-identical; reported
+numbers are the acceptance rate (fraction of draft tokens the verify pass
+kept), target-model passes per generated token, and wall-clock tok/s.
+
+On CPU the binary draft lowers through the XLA XNOR twin, which is *not*
+faster than the float matmul at smoke-model sizes — the draft's win there
+is pass-count compression (target passes/token < 1 whenever acceptance
+> 0), which is what the accelerator trade scales with, so both numbers
+are printed side by side.
+
+    PYTHONPATH=src python benchmarks/spec_bench.py
+    PYTHONPATH=src python benchmarks/spec_bench.py --spec-k 4 --kv-cache int8
+"""
+
+import argparse
+import os
+import sys
+import time
+
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, ".."))
+
+import numpy as np
+
+from repro.serving import ServeEngine
+
+
+def _markov_prompts(cfg, n, *, lens=(8, 12, 16), seed=0):
+    """In-distribution prompts (the affine-Markov training map), so the
+    trained model decodes with decisive argmax margins and the draft has
+    something learnable to agree with."""
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for _ in range(n):
+        x = int(rng.integers(0, cfg.vocab))
+        out = []
+        for _ in range(int(rng.choice(lens))):
+            out.append(x)
+            x = (x * 7 + 13) % cfg.vocab
+        prompts.append(np.asarray(out, np.int32))
+    return prompts
+
+
+def _serve(api, params, prompts, *, max_new, max_batch, max_len, **eng_kw):
+    eng = ServeEngine(api, params, max_batch=max_batch, max_len=max_len,
+                      **eng_kw)
+    # warmup: compile every variant on a throwaway same-shape workload
+    warm = ServeEngine(api, params, max_batch=max_batch, max_len=max_len,
+                       **eng_kw)
+    for p in prompts[:max_batch]:
+        warm.add_request(p, max_new=max_new)
+    warm.run()
+    rids = [eng.add_request(p, max_new=max_new) for p in prompts]
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    outs = [results[r] for r in rids]
+    return outs, sum(len(o) for o in outs), dt, eng
+
+
+def run(quick: bool = True, *, requests: int | None = None,
+        max_batch: int = 4, spec_k: int = 3, max_new: int = 12,
+        kv_cache: str = "bf16", kv_block_size: int = 0, seed: int = 0):
+    from benchmarks.serve_bench import _trained_smoke_lm
+
+    requests = requests if requests is not None else (12 if quick else 32)
+    cfg, api, params = _trained_smoke_lm()
+    prompts = _markov_prompts(cfg, requests, seed=seed)
+    max_len = max(len(p) for p in prompts) + max_new + spec_k + 8
+
+    base_out, btoks, bdt, beng = _serve(
+        api, params, prompts, max_new=max_new, max_batch=max_batch,
+        max_len=max_len, kv_cache=kv_cache, kv_block_size=kv_block_size)
+    spec_out, stoks, sdt, seng = _serve(
+        api, params, prompts, max_new=max_new, max_batch=max_batch,
+        max_len=max_len, kv_cache=kv_cache, kv_block_size=kv_block_size,
+        spec_k=spec_k)
+    assert spec_out == base_out, "speculative outputs diverged from baseline"
+
+    acc = seng.acceptance_rate()
+    # batched target-model passes for the whole workload — the number the
+    # binary draft compresses: the plain engine runs one float pass per
+    # tick, the spec engine one float verify per wave (draft passes run
+    # in binary mode)
+    base_passes = beng.stats["decode_steps"]
+    spec_passes = seng.stats["spec_waves"]
+    return [
+        ("spec/acceptance_rate", 0.0,
+         f"{acc * 100:.1f}% ({seng.stats['spec_accepted']}"
+         f"/{seng.stats['spec_drafted']} drafts kept; k={spec_k})"),
+        ("spec/float_passes", 0.0,
+         f"{base_passes} -> {spec_passes} batched target passes "
+         f"({base_passes / spec_passes:.2f}x fewer)"),
+        ("spec/base_tok_s", bdt / btoks * 1e6, f"{btoks / bdt:.1f} tok/s"),
+        ("spec/spec_tok_s", sdt / stoks * 1e6,
+         f"{stoks / sdt:.1f} tok/s ({bdt / sdt:.2f}x vs baseline)"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--spec-k", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--kv-cache", default="bf16",
+                    choices=["bf16", "int8", "binary"])
+    ap.add_argument("--kv-block-size", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for n, us, derived in run(requests=args.requests,
+                              max_batch=args.max_batch,
+                              spec_k=args.spec_k, max_new=args.max_new,
+                              kv_cache=args.kv_cache,
+                              kv_block_size=args.kv_block_size,
+                              seed=args.seed):
+        print(f"{n},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

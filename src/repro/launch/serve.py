@@ -50,6 +50,17 @@ def main(argv=None):
     ap.add_argument("--stop-tokens", default="",
                     help="comma list of token ids that end generation "
                          "early (EOS-style; slot engine only)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per wave "
+                         "through the binarized self-draft and verify "
+                         "them in one float pass (0 = off; slot engine, "
+                         "GQA archs only)")
+    ap.add_argument("--draft", default="binary",
+                    choices=["binary", "none"],
+                    help="speculative draft model: 'binary' = the served "
+                         "weights with sign-packed absmean-scaled MLPs "
+                         "(serving/spec.py); 'none' disables speculation "
+                         "even with --spec-decode set")
     ap.add_argument("--seed", type=int, default=0,
                     help="engine sampling seed (temperature > 0)")
     args = ap.parse_args(argv)
@@ -69,23 +80,25 @@ def main(argv=None):
             log.info("loaded checkpoint step %d", last)
 
     plens = [int(x) for x in args.prompt_lens.split(",")]
-    max_len = max(plens) + args.max_new + 8
+    max_len = max(plens) + args.max_new + 8 + args.spec_decode
     cls = ServeEngine if args.engine == "slot" else BucketEngine
     if cls is ServeEngine and api.cache_insert is None:
         log.warning("family %r has no slot-indexed cache insert; "
                     "falling back to the bucket engine", cfg.family)
         cls = BucketEngine
     stop = frozenset(int(x) for x in args.stop_tokens.split(",") if x)
+    spec_k = args.spec_decode if args.draft != "none" else 0
     if cls is ServeEngine:
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
                   attn_impl=args.attn_impl, kv_cache=args.kv_cache,
                   kv_block_size=args.kv_block_size,
-                  prefix_cache=args.prefix_cache)
+                  prefix_cache=args.prefix_cache,
+                  spec_k=spec_k, spec_draft="binary")
     else:
-        if args.kv_block_size or args.prefix_cache or stop:
-            ap.error("--kv-block-size/--prefix-cache/--stop-tokens need "
-                     "the slot engine")
+        if args.kv_block_size or args.prefix_cache or stop or spec_k:
+            ap.error("--kv-block-size/--prefix-cache/--stop-tokens/"
+                     "--spec-decode need the slot engine")
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
                   attn_impl=args.attn_impl, kv_cache=args.kv_cache)
@@ -106,6 +119,12 @@ def main(argv=None):
     if isinstance(eng, ServeEngine):
         log.info("slot utilization %.1f%%, stats %s",
                  eng.utilization() * 100, eng.stats)
+        if eng.spec_k:
+            log.info("speculative: k=%d, acceptance %.1f%% "
+                     "(%d/%d drafts), %d waves",
+                     eng.spec_k, eng.acceptance_rate() * 100,
+                     eng.stats["spec_accepted"], eng.stats["spec_drafted"],
+                     eng.stats["spec_waves"])
     for rid in sorted(results)[:4]:
         log.info("request %d -> %s", rid, results[rid])
     return results

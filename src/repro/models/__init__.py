@@ -37,6 +37,12 @@ class ModelApi(NamedTuple):
     # caches have no paged layout (MLA/SSM/whisper).
     init_paged_cache: Callable | None = None
     prefill_ctx: Callable | None = None
+    # speculative-decoding verify step: verify(params, caches, tokens
+    # (B, S)) -> (logits (B, S, vocab), caches) appends S tokens' exact
+    # K/V to the cache and scores every position causally in one pass.
+    # None for families without a multi-token GQA decode form (MLA's
+    # absorbed decode, SSM state, whisper's cross caches).
+    verify: Callable | None = None
 
     def init_deployed(self, key):
         """Deploy-time params: binary latents -> packed/int8 weights."""
@@ -81,6 +87,9 @@ def get_model(cfg: ModelConfig) -> ModelApi:
                 (lambda p, b, ctx, cl, **kw:
                  t.lm_prefill_ctx(p, cfg, b["tokens"], ctx, cl, **kw))
                 if paged else None),
+            # GQA families only: MLA's absorbed decode is single-token
+            verify=((lambda p, c, tok: t.lm_verify(p, cfg, c, tok))
+                    if not cfg.use_mla else None),
         )
     if cfg.family == "vlm":
         from repro.models import llama_vision as v

@@ -154,6 +154,32 @@ def gqa_decode(p, x, cfg: ModelConfig, cache):
     return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
 
 
+def gqa_verify(p, x, cfg: ModelConfig, cache):
+    """Multi-token decode against the cache — the speculative-decoding
+    verify step. x (B, S, d) carries a draft wave (S = k+1 tokens); their
+    exact K/V are appended at positions len..len+S-1 (overwriting the
+    draft's approximate entries, which were never visible — every read
+    masks by len) and query j attends causally to cols < len + j + 1
+    through the same fused blockwise attend the quantized/paged decode
+    uses, so one pass scores every draft position. Works on both pool
+    layouts and all cache codecs; ``len`` advances by S (the engine rolls
+    it back to len + accepted after the accept/reject pass)."""
+    s = x.shape[1]
+    base = cache["len"]                                 # (B,) pre-insert
+    positions = base[:, None] + jnp.arange(s)[None, :]  # (B, S) absolute
+    q, k, v = gqa_qkv(p, x, cfg, positions)
+    codec = kvc.get_codec(cfg.kv_cache)
+    q_lens = positions + 1
+    if "table" in cache:
+        cache = kvc.paged_insert_span(cache, k, v, codec)
+        o = kvc.paged_decode_attention(q, cache, codec, q_lens=q_lens)
+    else:
+        cache = codec.insert_span(cache, k, v, method=cfg.cache_update)
+        o = codec.decode_attention(q, cache, q_lens=q_lens)
+    o = o.reshape(*x.shape[:2], -1)
+    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
+
+
 # ---------------------------------------------------------------------------
 # MLA attention (DeepSeek V2/V3, MiniCPM3)
 # ---------------------------------------------------------------------------
@@ -320,6 +346,24 @@ def block_decode(p, x, cfg: ModelConfig, sig: BlockSig, cache):
         a, cache = mla_decode(p["attn"], h, cfg, cache)
     else:
         a, cache = gqa_decode(p["attn"], h, cfg, cache)
+    x = x + a
+    h = nn.rmsnorm_apply(p["ln2"], x)
+    if sig.moe:
+        from repro.models.moe import moe_apply
+        f, _ = moe_apply(p["ffn"], h, cfg)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg)
+    return x + f, cache
+
+
+def block_verify(p, x, cfg: ModelConfig, sig: BlockSig, cache):
+    """block_decode generalized to an S-token verify wave (GQA only —
+    MLA's absorbed decode has no multi-token causal-suffix form here)."""
+    if sig.attn == "mla":
+        raise ValueError("speculative verify requires GQA attention "
+                         "blocks; MLA families decode one token at a time")
+    h = nn.rmsnorm_apply(p["ln1"], x)
+    a, cache = gqa_verify(p["attn"], h, cfg, cache)
     x = x + a
     h = nn.rmsnorm_apply(p["ln2"], x)
     if sig.moe:
@@ -499,6 +543,34 @@ def segments_decode(params, x, cfg: ModelConfig, caches):
         def one(x, pc, sig=sig):
             p, c = pc
             y, c2 = block_decode(p, x, cfg, sig, c)
+            return y, c2
+
+        if cfg.scan_layers and count > 1:
+            x, c2 = jax.lax.scan(one, x, (stacked, cache))
+        else:
+            outs = []
+            for i in range(count):
+                p_i = jax.tree.map(lambda a: a[i], stacked)
+                c_i = jax.tree.map(lambda a: a[i], cache)
+                x, ci2 = one(x, (p_i, c_i))
+                outs.append(ci2)
+            c2 = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        new_caches[f"seg{si}"] = c2
+    return x, new_caches
+
+
+def segments_verify(params, x, cfg: ModelConfig, caches):
+    """segments_decode for an S-token verify wave: same scan-over-layers
+    structure, block_verify per block."""
+    segs = build_segments(cfg)
+    new_caches = {}
+    for si, (sig, start, count) in enumerate(segs):
+        stacked = params[f"seg{si}"]
+        cache = caches[f"seg{si}"]
+
+        def one(x, pc, sig=sig):
+            p, c = pc
+            y, c2 = block_verify(p, x, cfg, sig, c)
             return y, c2
 
         if cfg.scan_layers and count > 1:

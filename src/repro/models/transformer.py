@@ -177,6 +177,24 @@ def lm_decode(params, cfg: ModelConfig, caches, tokens):
     return logits[:, 0], caches
 
 
+def lm_verify(params, cfg: ModelConfig, caches, tokens):
+    """Speculative-decoding verify: tokens (B, S) = [last emitted token,
+    then S-1 draft tokens] -> (logits (B, S, vocab), new caches).
+
+    One cache-appending pass scores every draft position: token j's exact
+    K/V lands at cache position len+j and its logits are the target
+    model's distribution for the *next* token given the prefix through
+    token j — exactly what sequential decode would have produced when
+    drafts 1..j were all accepted. The cache ``len`` advances by S; the
+    engine rolls it back to len + accepted, which also discards the
+    rejected suffix (entries past len are invisible to every read and are
+    overwritten by later waves)."""
+    x = _embed(params, cfg, tokens)
+    h, caches = lc.segments_verify(params["blocks"], x, cfg, caches)
+    logits = _logits(params, cfg, h)
+    return logits, caches
+
+
 def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return lc.init_segment_caches(cfg, batch, max_len,
                                   dtype=lc.cdt(cfg))

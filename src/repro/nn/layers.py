@@ -32,6 +32,23 @@ def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
 
 
 def dense_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    if "w_packed" in p:
+        # Binarized draft weights (serving/spec.py): XNOR-net style
+        # forward  x @ W ~= (sign(x) @ sign(W)) * beta * alpha  with
+        # alpha = per-output absmean of the float weight (baked into
+        # ``scale`` at draft-build time) and beta = per-token absmean of
+        # the activation. The packed lowering itself — padding-bit
+        # correction, Pallas-vs-XLA impl resolution — is the deploy
+        # path's (core/binary_dense), shared, not re-implemented here.
+        # Structural dispatch keeps every float call site — FFN, QKV/O —
+        # draft-capable without threading a flag.
+        from repro.core.binary_dense import binary_dense_apply_packed
+        xf = x.astype(jnp.float32)
+        beta = jnp.mean(jnp.abs(xf), axis=-1, keepdims=True)
+        y = binary_dense_apply_packed(p, xf) * beta
+        if "b" in p:
+            y = y + p["b"].astype(jnp.float32)
+        return y.astype(compute_dtype)
     y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
     if "b" in p:
         y = y + p["b"].astype(compute_dtype)

@@ -35,6 +35,20 @@ Sampling (``temperature > 0``) uses per-request RNG streams: request
 ``rid``'s token t is drawn from fold_in(fold_in(seed_key, rid), t), so a
 request's sampled output is a function of (params, prompt, seed, rid) only
 — independent of pool size, co-resident traffic, and admission batching.
+
+Speculative decoding (``spec_k > 0``) swaps the one-token tick for a
+draft/verify wave — the BEANNA fp/binary mode mux running the serving hot
+loop. A binarized self-draft (serving/spec.py: the served weights with
+sign-packed + absmean-scaled MLPs, everything else aliased) proposes
+``spec_k`` tokens through the *target's own cache*; one multi-token verify
+pass (ModelApi.verify) re-scores every position with exact float K/V; the
+engine keeps the longest prefix whose tokens match what the request's own
+RNG stream would have emitted from the target logits, plus one correction
+/ bonus token. Outputs are token-identical to the non-speculative engine
+by construction — each emitted token is drawn from target logits at its
+own (rid, step) stream — and cache rollback is a per-slot length reset:
+rejected positions sit past ``len``, invisible to every masked read, and
+are overwritten by later waves.
 """
 
 from __future__ import annotations
@@ -48,8 +62,8 @@ import numpy as np
 from repro.serving import kvcache as kvc
 from repro.serving.kvcache import kv_pool_bytes
 from repro.serving.prefix import PrefixPool
-from repro.serving.scheduler import (FifoScheduler, Request, bucket_len,
-                                     make_buckets, pad_group)
+from repro.serving.scheduler import (FifoScheduler, Request, accept_wave,
+                                     bucket_len, make_buckets, pad_group)
 
 
 @dataclasses.dataclass
@@ -66,7 +80,8 @@ class ServeEngine:
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
                  min_bucket: int = 8, attn_impl: str | None = None,
                  kv_cache: str | None = None, kv_block_size: int = 0,
-                 prefix_cache: bool = False, n_blocks: int | None = None):
+                 prefix_cache: bool = False, n_blocks: int | None = None,
+                 spec_k: int = 0, spec_draft: str = "binary"):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
@@ -85,6 +100,18 @@ class ServeEngine:
         if prefix_cache and not kv_block_size:
             raise ValueError("prefix_cache requires kv_block_size > 0 "
                              "(the radix cache shares paged blocks)")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k and spec_draft != "binary":
+            raise ValueError(
+                f"unknown speculative draft {spec_draft!r}: 'binary' (the "
+                "sign-packed self-draft) is the only draft; spec_k=0 "
+                "disables speculation")
+        if spec_k and api.verify is None:
+            raise ValueError(
+                f"model {api.cfg.name!r} has no multi-token verify step "
+                "(MLA/SSM caches decode one token at a time); speculative "
+                "decoding requires a GQA KV pool (spec_k=0)")
         if kv_block_size and api.init_paged_cache is None:
             raise ValueError(
                 f"model {api.cfg.name!r} has no paged cache layout "
@@ -133,10 +160,14 @@ class ServeEngine:
         # next to the throughput numbers. prefilled_tokens counts tokens
         # actually run through prefill attention; cached_prompt_tokens
         # counts prompt tokens served from the radix cache instead.
+        # spec_*: speculative-decoding counters (spec_k > 0): waves run,
+        # draft tokens proposed, draft tokens accepted by verify —
+        # acceptance_rate() = spec_accepted / spec_drafted
         self.stats = {"decode_steps": 0, "occupied_slot_steps": 0,
                       "prefills": 0, "admitted": 0, "evictions": 0,
                       "generated_tokens": 0, "prefilled_tokens": 0,
                       "cached_prompt_tokens": 0,
+                      "spec_waves": 0, "spec_drafted": 0, "spec_accepted": 0,
                       "kv_bytes": kv_pool_bytes(self.caches)}
         # the pool cache is donated: step/admit immediately rebind
         # self.caches, so XLA can update the (layers, B, T, ...) buffers in
@@ -175,6 +206,34 @@ class ServeEngine:
 
         self._sample_rows = jax.jit(sample_rows)
 
+        def sample_rows_wave(rids, base_steps, logits, t):
+            # verify-wave sampling: position j of row r draws from the
+            # same per-request stream the non-speculative engine would
+            # use for its (len(out)+j)-th token — same fold_in chain,
+            # same categorical over a (V,) row, so a given logits row
+            # yields the identical token bit for bit
+            def one(rid, b0, rows):
+                def pos(j, row):
+                    k = jax.random.fold_in(
+                        jax.random.fold_in(seed_key, rid), b0 + j)
+                    return jax.random.categorical(k, row / t)
+
+                return jax.vmap(pos)(jnp.arange(rows.shape[0]), rows)
+
+            return jax.vmap(one)(rids, base_steps, logits).astype(jnp.int32)
+
+        self._sample_rows_wave = jax.jit(sample_rows_wave)
+
+        self.spec_k = int(spec_k)
+        if self.spec_k:
+            from repro.serving.spec import binarize_draft_params
+            # the draft aliases every non-FFN target array; only the
+            # packed sign bits + absmean scales are new residency
+            self.draft_params = binarize_draft_params(params, api.cfg)
+            self._verify_step = jax.jit(api.verify, donate_argnums=1)
+            self._set_lens = jax.jit(kvc.set_cache_lengths,
+                                     donate_argnums=0)
+
     def add_request(self, prompt, max_new: int = 16,
                     stop_tokens=()) -> int:
         prompt = np.asarray(prompt, np.int32)
@@ -186,6 +245,12 @@ class ServeEngine:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
                 f"max_len ({self.max_len})")
+        if self.spec_k and len(prompt) + max_new + self.spec_k > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) + spec_k "
+                f"({self.spec_k}) exceeds max_len ({self.max_len}): "
+                "speculative waves write up to spec_k tokens of scratch "
+                "K/V past the last kept position")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new,
@@ -195,24 +260,39 @@ class ServeEngine:
 
     # -- sampling -----------------------------------------------------------
 
-    def _sample(self, logits, reqs):
+    def _sample(self, logits, reqs, step_offset: int = 0):
         """reqs: one Request (or None for free/dummy rows) per logits row.
 
         Greedy is a pure argmax. Stochastic sampling draws row r from the
         request's own stream — fold_in(fold_in(seed, rid), len(out)) — so
         tokens don't depend on which other rows happen to share the call.
         Free/dummy rows draw from (rid 0, step 0); their tokens are never
-        read.
+        read. step_offset shifts every stream index forward (the draft
+        phase guessing the wave's j-th emission before anything appends).
         """
         if self.temperature <= 0:
             return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         rids = np.asarray([r.rid if r is not None else 0 for r in reqs],
                           np.int32)
-        steps = np.asarray([len(r.out) if r is not None else 0
+        steps = np.asarray([len(r.out) + step_offset if r is not None else 0
                             for r in reqs], np.int32)
         return np.asarray(self._sample_rows(jnp.asarray(rids),
                                             jnp.asarray(steps), logits,
                                             float(self.temperature)))
+
+    def _sample_wave(self, logits, reqs):
+        """Candidate tokens for a verify wave: logits (B, S, V); position
+        (r, j) draws from stream (rid, len(out)+j) — exactly the token the
+        non-speculative engine would emit as the request's next j-th."""
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        rids = np.asarray([r.rid if r is not None else 0 for r in reqs],
+                          np.int32)
+        base = np.asarray([len(r.out) if r is not None else 0
+                           for r in reqs], np.int32)
+        return np.asarray(self._sample_rows_wave(jnp.asarray(rids),
+                                                 jnp.asarray(base), logits,
+                                                 float(self.temperature)))
 
     # -- slot lifecycle -----------------------------------------------------
 
@@ -313,7 +393,10 @@ class ServeEngine:
                 r = deferred[0]
                 chain = chains[r.rid]
                 ctx_pages = len(chain)
-                need = -(-(len(r.prompt) + r.max_new - 1) // bs) - ctx_pages
+                # +spec_k: verify waves write draft-scratch K/V up to
+                # spec_k positions past the last kept token
+                need = (-(-(len(r.prompt) + r.max_new - 1 + self.spec_k)
+                          // bs) - ctx_pages)
                 blocks = self.pool.alloc(need, clock=self.step_count)
                 if blocks is None:
                     break                      # pool exhausted this wave
@@ -418,7 +501,10 @@ class ServeEngine:
 
     def step(self) -> bool:
         """One tick: admit into free slots, then one batched decode step over
-        the full pool. Returns False once no slot is occupied (idle)."""
+        the full pool (or one draft/verify wave with spec_k > 0). Returns
+        False once no slot is occupied (idle)."""
+        if self.spec_k:
+            return self._step_spec()
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
@@ -440,6 +526,92 @@ class ServeEngine:
                     self._publish_block(st, cur // self.block_size - 1, r)
             self._append_token(i, int(nxt[i]))
         return True
+
+    def _step_spec(self) -> bool:
+        """One speculative wave: admit, draft spec_k tokens through the
+        binarized self-draft (sharing the target cache), verify all of
+        them plus the pending token in one float pass, and keep the
+        longest matching prefix + one correction/bonus token per slot.
+
+        Token-identity with the plain engine holds by construction: the
+        wave's j-th emission is drawn from *target* logits conditioned on
+        an all-accepted history, using the request's own (rid, step)
+        stream — the draft only decides how many of those emissions one
+        wave can bank (1..spec_k+1 per slot)."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return False
+        k = self.spec_k
+        reqs = list(self.slots)
+        # pre-wave cache length per slot (invariant: plen + len(out) - 1;
+        # next_tok's K/V is not yet inserted). Free slots pin to 0 so
+        # their draft-scratch writes stay invisible and bounded.
+        base_len = np.zeros((self.max_batch,), np.int32)
+        for i in active:
+            r = self.slots[i]
+            base_len[i] = len(r.prompt) + len(r.out) - 1
+
+        # -- draft: k binary-mode decode steps appending approximate K/V
+        toks = [self.next_tok.copy()]                   # t0 = last emitted
+        cur = jnp.asarray(self.next_tok)
+        for j in range(k):
+            logits, self.caches = self._decode(self.draft_params,
+                                               self.caches, cur)
+            nxt = self._sample(logits, reqs, step_offset=j)
+            toks.append(np.asarray(nxt)[:, None])
+            cur = jnp.asarray(toks[-1])
+        # rewind: the draft's K/V (positions base_len..base_len+k-1) drop
+        # out of every masked read before verify overwrites them
+        self.caches = self._set_lens(self.caches, jnp.asarray(base_len))
+
+        # -- verify: one pass scores k+1 positions with exact K/V
+        tok_mat = np.concatenate(toks, axis=1)          # (B, k+1)
+        logits_v, self.caches = self._verify_step(self.params, self.caches,
+                                                  jnp.asarray(tok_mat))
+        cand = self._sample_wave(logits_v, reqs)        # (B, k+1)
+
+        # -- accept/reject (host): longest draft prefix matching the
+        # request's own-stream emissions, then one correction/bonus token
+        wave: dict[int, list[int]] = {}
+        new_lens = np.zeros((self.max_batch,), np.int32)
+        for i in active:
+            emitted = accept_wave(cand[i], tok_mat[i, 1:])
+            wave[i] = emitted
+            self.stats["spec_drafted"] += k
+            self.stats["spec_accepted"] += len(emitted) - 1
+            new_lens[i] = base_len[i] + len(emitted)
+        # roll back before any bookkeeping: rejected positions fall past
+        # len (and free slots to 0); paged _finish, which re-zeros its
+        # slot, runs after this
+        self.caches = self._set_lens(self.caches, jnp.asarray(new_lens))
+        self.step_count += 1
+        self.stats["decode_steps"] += 1
+        self.stats["spec_waves"] += 1
+        self.stats["occupied_slot_steps"] += len(active)
+        for i in active:
+            r = self.slots[i]
+            for tok in wave[i]:
+                if self.paged and self.prefix_on:
+                    # same crossing rule as the plain tick: the wave's
+                    # verify pass completed the block covering positions
+                    # [cur - bs, cur) with exact K/V
+                    st = self._pstate[i]
+                    cur_len = st.plen + len(r.out)
+                    if cur_len % self.block_size == 0:
+                        self._publish_block(st,
+                                            cur_len // self.block_size - 1,
+                                            r)
+                if self._append_token(i, int(tok)):
+                    # finished (max_new / stop token): the rest of the
+                    # wave is discarded — neither emitted nor counted
+                    break
+        return True
+
+    def acceptance_rate(self) -> float:
+        """Fraction of draft tokens the verify pass accepted."""
+        d = self.stats["spec_drafted"]
+        return self.stats["spec_accepted"] / d if d else 0.0
 
     def run(self) -> dict[int, list[int]]:
         """Drain queue and slots; returns rid -> generated ids (cumulative

@@ -109,6 +109,40 @@ def _pad_time(a, max_len):
     return jnp.pad(a, pad)
 
 
+def _write_span(cache, new_leaves, *, method):
+    """Insert S tokens per sequence starting at position cache['len'] for
+    every named leaf — the multi-token generalization of _write_timestep
+    used by the speculative-decoding verify step. ``len`` advances by S.
+
+    The dus path is _write_timestep's verbatim (dynamic_update_slice takes
+    any update length); the mask path gathers each written position's row
+    out of ``new`` so one jnp.where covers the whole span."""
+    method = attn_lib.resolve_cache_update(method)
+    idx = cache["len"]  # (B,)
+    s = next(iter(new_leaves.values())).shape[1]
+    out = dict(cache)
+    if method == "mask":
+        for name, new in new_leaves.items():
+            buf = cache[name]
+            t = buf.shape[1]
+            pos = jnp.arange(t)[None, :]                     # (1, T)
+            m = (pos >= idx[:, None]) & (pos < idx[:, None] + s)
+            src = jnp.clip(pos - idx[:, None], 0, s - 1)     # (B, T)
+            src = src.reshape(*src.shape, *([1] * (buf.ndim - 2)))
+            gathered = jnp.take_along_axis(new.astype(buf.dtype), src,
+                                           axis=1)
+            m = m.reshape(m.shape[0], t, *([1] * (buf.ndim - 2)))
+            out[name] = jnp.where(m, gathered, buf)
+    else:
+        for name, new in new_leaves.items():
+            buf = cache[name]
+            out[name] = jax.vmap(
+                lambda b_, n_, i: jax.lax.dynamic_update_slice_in_dim(
+                    b_, n_, i, axis=0))(buf, new.astype(buf.dtype), idx)
+    out["len"] = idx + s
+    return out
+
+
 def _write_timestep(cache, new_leaves, *, method):
     """Insert one token per sequence at position cache['len'] for every
     named leaf (values, scales, ...). Same dus/mask policy as
@@ -138,12 +172,18 @@ def _write_timestep(cache, new_leaves, *, method):
 # dequant-fused decode: blockwise online softmax over the encoded cache
 # ---------------------------------------------------------------------------
 
-def _fused_quant_decode(q, cache, codec, *, scale=None, kv_block: int = 128):
+def _fused_quant_decode(q, cache, codec, *, scale=None, kv_block: int = 128,
+                        q_lens=None):
     """Single-query attention over a quantized cache without materializing
     it. A scan over kv blocks dequantizes one (B, kb, H, D) tile per step
     and folds it into the flash-style (num, den, max) recurrence — the
     bounded-tile discipline of blockwise_attention_xla, with dequant fused
-    into the block load. Returns (B, S, Hq, D) in q's dtype."""
+    into the block load. Returns (B, S, Hq, D) in q's dtype.
+
+    q_lens (B, S), optional: per-query visible lengths for the speculative
+    verify step — query j attends cols < q_lens[b, j] instead of every
+    query sharing cache['len'] (the S>1 causal-suffix case). None keeps
+    the decode path bit-identical to before the parameter existed."""
     b, s, hq, d = q.shape
     enc = codec.encoded_leaves(cache)
     t = next(iter(enc.values())).shape[1]
@@ -151,6 +191,8 @@ def _fused_quant_decode(q, cache, codec, *, scale=None, kv_block: int = 128):
     g = hq // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     kv_len = jnp.minimum(cache["len"].astype(jnp.int32), t)
+    if q_lens is not None:
+        q_lim = jnp.minimum(q_lens.astype(jnp.int32), t)     # (B, S)
 
     kb = min(kv_block, t)
     nk = -(-t // kb)
@@ -170,8 +212,13 @@ def _fused_quant_decode(q, cache, codec, *, scale=None, kv_block: int = 128):
         sij = jnp.einsum("bshgd,bkhd->bhgsk", qg, k_blk,
                          preferred_element_type=jnp.float32) * scale
         cols = start + jnp.arange(kb)
-        valid = (cols >= jk * kb) & (cols[None, :] < kv_len[:, None])
-        valid = valid[:, None, None, None, :]
+        if q_lens is None:
+            valid = (cols >= jk * kb) & (cols[None, :] < kv_len[:, None])
+            valid = valid[:, None, None, None, :]
+        else:
+            valid = ((cols >= jk * kb)[None, None, :]
+                     & (cols[None, None, :] < q_lim[:, :, None]))
+            valid = valid[:, None, None, :, :]      # (B, 1, 1, S, kb)
         sij = jnp.where(valid, sij, NEG_INF)
         m_cur = jnp.maximum(m_prev, jnp.max(sij, -1))   # (B, Hkv, G, S)
         p = jnp.exp(sij - m_cur[..., None])
@@ -231,6 +278,11 @@ class CacheCodec:
         return _write_timestep(cache, self.encode(k_new, v_new),
                                method=method)
 
+    def insert_span(self, cache, k_new, v_new, *, method="auto"):
+        """Insert S tokens per sequence starting at cache['len'] (the
+        speculative verify step's cache-appending write; S >= 1)."""
+        return _write_span(cache, self.encode(k_new, v_new), method=method)
+
     def materialize(self, cache, dtype=jnp.bfloat16, *, head_dim=None):
         """Full dequantized (k, v), both (B, T, H, D) — tests/debug only;
         the decode path never calls this for quantized codecs. ``head_dim``
@@ -238,7 +290,8 @@ class CacheCodec:
         bit-packing rounds D up to whole uint32 lanes)."""
         raise NotImplementedError
 
-    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+    def decode_attention(self, q, cache, *, scale=None, impl="auto",
+                         q_lens=None):
         raise NotImplementedError
 
     def bytes_per_token(self, n_kv: int, head_dim: int) -> int:
@@ -278,7 +331,13 @@ class Bf16Codec(CacheCodec):
     def materialize(self, cache, dtype=jnp.bfloat16, *, head_dim=None):
         return cache["k"].astype(dtype), cache["v"].astype(dtype)
 
-    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+    def decode_attention(self, q, cache, *, scale=None, impl="auto",
+                         q_lens=None):
+        if q_lens is not None:
+            # verify path: per-query lengths only exist on the fused
+            # blockwise attend (bf16 passes through dequant_block)
+            return _fused_quant_decode(q, cache, self, scale=scale,
+                                       q_lens=q_lens)
         return attn_lib.decode_attention(q, cache["k"], cache["v"],
                                          kv_len=cache["len"], scale=scale,
                                          impl=impl)
@@ -318,9 +377,11 @@ class Int8Codec(CacheCodec):
         return (kvq.kv_dequant_int8(cache["k_q"], cache["k_s"], dtype=dtype),
                 kvq.kv_dequant_int8(cache["v_q"], cache["v_s"], dtype=dtype))
 
-    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+    def decode_attention(self, q, cache, *, scale=None, impl="auto",
+                         q_lens=None):
         del impl  # fused path is the whole point; decode is already O(T)
-        return _fused_quant_decode(q, cache, self, scale=scale)
+        return _fused_quant_decode(q, cache, self, scale=scale,
+                                   q_lens=q_lens)
 
     def n_kv(self, cache):
         return cache["k_q"].shape[2]
@@ -365,9 +426,11 @@ class BinaryCodec(CacheCodec):
                 kvq.kv_dequant_binary(cache["v_p"], cache["v_s"], head_dim,
                                       dtype=dtype))
 
-    def decode_attention(self, q, cache, *, scale=None, impl="auto"):
+    def decode_attention(self, q, cache, *, scale=None, impl="auto",
+                         q_lens=None):
         del impl
-        return _fused_quant_decode(q, cache, self, scale=scale)
+        return _fused_quant_decode(q, cache, self, scale=scale,
+                                   q_lens=q_lens)
 
     def n_kv(self, cache):
         return cache["k_p"].shape[2]
@@ -496,12 +559,43 @@ def paged_insert_timestep(cache, k_new, v_new, codec: CacheCodec):
     return out
 
 
-def paged_decode_attention(q, cache, codec: CacheCodec, *, scale=None):
+def paged_insert_span(cache, k_new, v_new, codec: CacheCodec):
+    """Per-layer verify insert: encode S tokens per slot and write token j
+    at (table[b, (len+j) // bs], (len+j) % bs) — the multi-token
+    generalization of paged_insert_timestep. Positions past the block
+    table (free slots' hole rows, overflowing pages) drop."""
+    idx = cache["len"]                                   # (B,)
+    s = k_new.shape[1]
+    bs = paged_block_size(cache)
+    table = cache["table"]
+    n_pages = table.shape[1]
+    n_blocks = next(v for k, v in cache.items()
+                    if k not in ("len", "table")).shape[0]
+    pos = idx[:, None] + jnp.arange(s)[None, :]          # (B, S)
+    page = pos // bs
+    off = pos - page * bs
+    phys = jnp.take_along_axis(table, jnp.minimum(page, n_pages - 1),
+                               axis=1)                   # (B, S)
+    phys = jnp.where(page < n_pages, phys, n_blocks)     # overflow -> hole
+    out = dict(cache)
+    for name, new in codec.encode(k_new, v_new).items():
+        buf = cache[name]
+        out[name] = buf.at[phys, off].set(new.astype(buf.dtype),
+                                          mode="drop")
+    out["len"] = idx + s
+    return out
+
+
+def paged_decode_attention(q, cache, codec: CacheCodec, *, scale=None,
+                           q_lens=None):
     """Single-query attention through the block table: the same blockwise
     online-softmax recurrence as _fused_quant_decode, with the per-step
     contiguous time slice replaced by a gather of each slot's page-jk
     physical block — one (B, block_size, Hkv, D) tile live per step,
-    dequantized (for quantized codecs) inside the block load."""
+    dequantized (for quantized codecs) inside the block load.
+
+    q_lens (B, S), optional: per-query visible lengths (speculative
+    verify); None keeps every query on the slot's kv_len as before."""
     b, s, hq, d = q.shape
     enc = codec.encoded_leaves(cache)
     table = cache["table"]                              # (B, n_pages)
@@ -512,6 +606,8 @@ def paged_decode_attention(q, cache, codec: CacheCodec, *, scale=None):
     g = hq // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     kv_len = jnp.minimum(cache["len"].astype(jnp.int32), n_pages * bs_blk)
+    if q_lens is not None:
+        q_lim = jnp.minimum(q_lens.astype(jnp.int32), n_pages * bs_blk)
 
     qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
 
@@ -525,7 +621,12 @@ def paged_decode_attention(q, cache, codec: CacheCodec, *, scale=None):
         sij = jnp.einsum("bshgd,bkhd->bhgsk", qg, k_blk,
                          preferred_element_type=jnp.float32) * scale
         cols = jk * bs_blk + jnp.arange(bs_blk)
-        valid = (cols[None, :] < kv_len[:, None])[:, None, None, None, :]
+        if q_lens is None:
+            valid = (cols[None, :] < kv_len[:, None])[:, None, None,
+                                                      None, :]
+        else:
+            valid = (cols[None, None, :]
+                     < q_lim[:, :, None])[:, None, None, :, :]
         sij = jnp.where(valid, sij, NEG_INF)
         m_cur = jnp.maximum(m_prev, jnp.max(sij, -1))   # (B, Hkv, G, S)
         p = jnp.exp(sij - m_cur[..., None])

@@ -88,6 +88,27 @@ class FifoScheduler:
         return group[:n_free]
 
 
+def accept_wave(candidates, drafts) -> list[int]:
+    """Speculative-decoding accept rule (pure policy, no JAX).
+
+    candidates: the k+1 tokens the request's own RNG stream emits from
+    *target* logits at verify positions 0..k (candidates[j] is what the
+    non-speculative engine would emit as the wave's j-th token, valid
+    whenever drafts 0..j-1 were all accepted). drafts: the k draft
+    proposals. Returns the wave's emitted tokens (1..k+1): the longest
+    draft prefix that matches the candidates, then one correction token
+    (first mismatch) or bonus token (all drafts held). Token-identity
+    with sequential decoding is structural: every returned token IS a
+    candidate, conditioned on an all-accepted history."""
+    emitted = []
+    for j, d in enumerate(drafts):
+        emitted.append(int(candidates[j]))
+        if emitted[-1] != int(d):
+            return emitted
+    emitted.append(int(candidates[len(drafts)]))
+    return emitted
+
+
 def poisson_workload(n: int, *, rate: float, prompt_lens=(8, 12, 16),
                      max_new=(4, 16), vocab: int = 256, seed: int = 0):
     """n requests with exponential inter-arrival gaps (arrival unit = one

@@ -1,0 +1,105 @@
+"""Binarized self-draft for speculative decoding — BEANNA's mode mux
+applied to the *serving hot loop*.
+
+The paper's accelerator runs one datapath that mode-switches per layer
+between full-precision float and 1-bit XNOR-popcount compute. Speculative
+decoding is the serving-era version of that hybrid network: a cheap
+*draft* proposes k tokens, an exact *verify* pass keeps only the prefix
+the float model agrees with. Here the draft is the served transformer
+itself with its MLP (and optionally QKV/O projection) weights binarized —
+sign bits packed 32/uint32 lane (the forward of ``core.binarize.sign_ste``
+is exactly the packing predicate ``w >= 0``) plus a per-output absmean
+scale, applied XNOR-net style as
+
+    x @ W  ~=  (sign(x) @ sign(W)) * beta * alpha
+
+with beta the per-token activation absmean (computed on the fly in
+``nn/layers.dense_apply``) and alpha baked into the draft params. The
+matmul lowers through ``kernels/binary_matmul.py`` on accelerators and its
+XLA XNOR twin on CPU (``kernels/ops.binary_dense_packed``).
+
+Everything *outside* the binarized denses — embeddings, norms, rotary,
+attention (by default), the LM head — is shared with the target **by
+reference**: the draft param tree aliases the target arrays, so the only
+new residency is the packed FFN bits (~16x smaller than the latents they
+shadow, the paper's Table II trade). The draft also shares the target's
+KV cache: draft steps append approximate K/V past the valid length, and
+the verify pass overwrites those positions with exact K/V before any of
+them become visible — so speculation costs zero extra cache memory and
+cache rollback is a per-slot length reset (see ServeEngine._step_spec).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.binarize import pack_bits
+
+
+def _pack_dense(p):
+    """One float dense dict {"w": (..., K, N)} -> binary-draft dict
+    {"w_packed": (..., N, ceil(K/32)) uint32, "scale": (..., N) f32}
+    (bias, if any, passes through) — the same layout
+    ``core/binary_dense.pack_for_inference`` deploys, so the draft runs
+    the deploy path's packed lowering. Leading (stacked-segment) dims are
+    preserved so jax.lax.scan over layers sees the same tree shape."""
+    w = jnp.asarray(p["w"], jnp.float32)
+    wt = jnp.swapaxes(w, -1, -2)                   # (..., N, K)
+    out = {"w_packed": pack_bits(wt),
+           "scale": jnp.mean(jnp.abs(wt), axis=-1)}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def binarize_draft_params(params, cfg, *, attn_proj: bool = False):
+    """Target LM params -> binary self-draft params.
+
+    Every float SwiGLU FFN (keys w_gate/w_up/w_down) is replaced by its
+    sign-packed + absmean-scaled form; with ``attn_proj`` the QKV/O
+    projections too. Embeddings, norms, and the LM head stay float —
+    the paper's edge-layers-stay-float rule, which is what keeps the
+    draft's logit calibration close enough to the target for useful
+    acceptance rates. FFNs that are *already* binary under the model's
+    PrecisionPolicy ("bin_in" blocks) are kept as-is: they are their own
+    draft. MoE FFNs (expert stacks) are left float — unsupported for
+    drafting, and the MoE archs here are MLA-cached (no verify path)
+    anyway.
+    """
+    del cfg  # geometry is implied by the param tree
+    blocks = {}
+    for name, seg in params["blocks"].items():
+        seg = dict(seg)
+        ffn = seg["ffn"]
+        if isinstance(ffn.get("w_gate"), dict) and "w" in ffn["w_gate"]:
+            seg["ffn"] = {
+                k: (_pack_dense(v) if k in ("w_gate", "w_up", "w_down")
+                    else v)
+                for k, v in ffn.items()
+            }
+        if attn_proj and "wq" in seg.get("attn", {}):
+            attn = dict(seg["attn"])
+            for k in ("wq", "wk", "wv", "wo"):
+                attn[k] = _pack_dense(attn[k])
+            seg["attn"] = attn
+        blocks[name] = seg
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def draft_param_bytes(params) -> int:
+    """Resident bytes of the draft-only leaves (w_packed + its scale) —
+    the speculation subsystem's whole extra memory footprint, everything
+    else being aliased target arrays."""
+    total = 0
+    stack = [params]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, dict):
+            if "w_packed" in node:
+                for leaf in (node["w_packed"], node["scale"]):
+                    total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+            else:
+                stack.extend(node.values())
+    return total

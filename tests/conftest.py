@@ -1,8 +1,55 @@
 import os
 import sys
 
+import pytest
+
 # tests must see exactly ONE device (the dry-run sets 512 in its own
 # process); keep any user XLA_FLAGS out of the test environment.
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def trained_lm():
+    """Briefly trained f32 smoke LM shared by every token-parity suite
+    (kvcache, prefix cache, engine parity, speculative decoding) —
+    session-scoped so the ~200 AdamW steps run once per pytest session,
+    not once per module.
+
+    Why trained: a random-init LM's greedy argmax rides on top-2 gaps of
+    ~1e-3 logits — below any cache codec's or attention reordering's
+    noise floor — while this model predicts the affine-Markov synthetic
+    map with gaps of several logits, so token-identity claims are about
+    the subsystem under test, not tie-breaking luck. Why the float-FFN /
+    f32 variant: BEANNA's binarized FFN turns 1-ulp cache perturbations
+    into O(1) logit jumps through sign(), and bf16 logits carry exact
+    top-2 ties — both of which would test the model, not the cache.
+
+    Returns (cfg, api, params). Prompts should follow the training map
+    (x -> (7x + 13) mod vocab) so decoding stays in-distribution; see
+    the ``markov`` helpers in the consuming suites.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.configs.base import PrecisionPolicy
+    from repro.data.synthetic import SyntheticTokens
+    from repro.models import get_model
+    from repro.optim import adamw_init
+    from repro.train.step import make_train_step
+
+    cfg = smoke_config("stablelm-3b").replace(
+        policy=PrecisionPolicy(), compute_dtype="float32",
+        param_dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(api, cfg, peak_lr=1e-3, warmup=20,
+                                   total=200))
+    for _, batch in zip(range(200), SyntheticTokens(cfg.vocab, 32, 16,
+                                                    seed=0)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, _ = step(params, opt, batch)
+    return cfg, api, params

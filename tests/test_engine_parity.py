@@ -1,0 +1,67 @@
+"""THE engine-parity matrix: one parameterized test covering
+{bf16, int8} codecs x {contiguous, paged} pools x {greedy, seeded
+sampling}, every cell asserting token-identical outputs against the bf16
+contiguous reference engine on the session-trained smoke LM.
+
+This consolidates the per-codec / per-pool parity loops that used to be
+scattered across tests/test_kvcache.py and ad-hoc engine comparisons: a
+new codec or pool layout earns its correctness claim by adding one
+parameter here. The binary codec is deliberately absent — it is the
+documented-lossy end of the trade and stays on its tolerance path in
+tests/test_kvcache.py (logit-scale bounds) and the paged-pool-exactness
+checks in tests/test_prefix_cache.py.
+
+Sampled cells double as determinism coverage: with per-request RNG
+streams, outputs are a function of (params, prompt, seed, rid) only, so
+changing the cache codec or pool layout must not perturb a single token.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving import ServeEngine
+
+
+def _markov(start, n, vocab):
+    out, x = [], start
+    for _ in range(n):
+        out.append(x)
+        x = (x * 7 + 13) % vocab
+    return np.asarray(out, np.int32)
+
+
+def _outputs(api, params, prompts, *, temperature, **kw):
+    eng = ServeEngine(api, params, max_batch=2, max_len=64,
+                      temperature=temperature, seed=11, **kw)
+    rids = [eng.add_request(p, max_new=8) for p in prompts]
+    res = eng.run()
+    return [res[r] for r in rids]
+
+
+@pytest.fixture(scope="module")
+def matrix_prompts(trained_lm):
+    cfg, _, _ = trained_lm
+    # mixed lengths force padded prefill buckets + multi-wave admission
+    return [_markov(3 + i, 7 + (i % 4), cfg.vocab) for i in range(5)]
+
+
+@pytest.fixture(scope="module")
+def reference(trained_lm, matrix_prompts):
+    """bf16 contiguous outputs, one run per sampling mode."""
+    cfg, api, params = trained_lm
+    return {t: _outputs(api, params, matrix_prompts, temperature=t,
+                        kv_cache="bf16", kv_block_size=0)
+            for t in (0.0, 0.8)}
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8],
+                         ids=["greedy", "sampled"])
+@pytest.mark.parametrize("pool", ["contiguous", "paged"])
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_engine_parity_matrix(trained_lm, matrix_prompts, reference,
+                              codec, pool, temperature):
+    cfg, api, params = trained_lm
+    got = _outputs(api, params, matrix_prompts, temperature=temperature,
+                   kv_cache=codec,
+                   kv_block_size=8 if pool == "paged" else 0)
+    assert got == reference[temperature], (codec, pool, temperature)

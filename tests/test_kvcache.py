@@ -1,18 +1,14 @@
 """KV-cache codec subsystem: kernel parity (Pallas interpret vs XLA twins),
 codec roundtrips, dequant-fused decode vs the reference attend, int8
 greedy token-parity on a trained smoke LM, the documented binary-codec
-tolerance, slot-scatter / pad-invisibility contracts, and engine parity
-with the int8 codec.
+tolerance, slot-scatter / pad-invisibility contracts, and engine stats /
+byte accounting (codec x pool x sampling token-parity lives in
+tests/test_engine_parity.py).
 
-The token-parity / tolerance tests run on a *briefly trained* smoke LM
-(affine-Markov synthetic stream, ~200 AdamW steps, a few seconds on CPU):
-a random-init LM's greedy argmax rides on top-2 gaps of ~1e-3 logits —
-below any cache codec's noise floor — while the trained model predicts the
-affine map with gaps of several logits, so token-identity is a statement
-about the codec rather than about tie-breaking luck. The model is the
-float-FFN / f32 variant: BEANNA's binarized FFN turns 1-ulp cache
-perturbations into O(1) logit jumps through sign(), and bf16 logits carry
-exact top-2 ties, both of which test the model, not the cache.
+The token-parity / tolerance tests run on the session-trained smoke LM
+from tests/conftest.py (affine-Markov synthetic stream, ~200 AdamW steps,
+one training run per pytest session); see the ``trained_lm`` fixture's
+docstring for why trained and why the float-FFN / f32 variant.
 """
 
 import jax
@@ -21,11 +17,10 @@ import numpy as np
 import pytest
 
 from repro.configs import smoke_config
-from repro.configs.base import PrecisionPolicy
 from repro.kernels import kv_quant as kvq
 from repro.models import get_model
 from repro.nn import attention as attn_lib
-from repro.serving import BucketEngine, ServeEngine
+from repro.serving import ServeEngine
 from repro.serving import kvcache as kvc
 
 jax.config.update("jax_platform_name", "cpu")
@@ -248,25 +243,11 @@ def test_set_cache_lengths_pad_invisibility(name):
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
-def trained_model():
-    from repro.data.synthetic import SyntheticTokens
-    from repro.optim import adamw_init
-    from repro.train.step import make_train_step
-
-    cfg = smoke_config("stablelm-3b").replace(
-        policy=PrecisionPolicy(), compute_dtype="float32",
-        param_dtype="float32")
-    api = get_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    opt = adamw_init(params)
-    step = jax.jit(make_train_step(api, cfg, peak_lr=1e-3, warmup=20,
-                                   total=200))
-    data = SyntheticTokens(cfg.vocab, 32, 16, seed=0)
-    for _, batch in zip(range(200), data):
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        params, opt, _ = step(params, opt, batch)
-    # an in-distribution prompt (follows the affine-Markov map), so the
-    # trained model decodes with multi-logit argmax margins
+def trained_model(trained_lm):
+    """The shared session-trained smoke LM (tests/conftest.py) plus an
+    in-distribution prompt (follows the affine-Markov map), so the model
+    decodes with multi-logit argmax margins."""
+    cfg, _api, params = trained_lm
     prompt = [3]
     for _ in range(7):
         prompt.append((prompt[-1] * 7 + 13) % cfg.vocab)
@@ -333,26 +314,23 @@ def test_binary_logits_within_documented_tolerance(trained_model):
 
 
 # ---------------------------------------------------------------------------
-# engine parity with the int8 codec (padding + slot machinery is codec-
-# agnostic: both engines quantize per token, so greedy outputs match)
+# engine stats / byte accounting with the int8 codec. Codec x pool x
+# sampling token-parity is consolidated in ONE place now — the engine-
+# parity matrix in tests/test_engine_parity.py — instead of per-codec
+# engine-vs-engine loops scattered across suites.
 # ---------------------------------------------------------------------------
 
-def test_engine_parity_with_int8_codec():
+def test_engine_stats_and_kv_bytes_with_int8_codec():
     cfg = smoke_config("stablelm-3b")
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    bucket = BucketEngine(api, params, max_batch=4, max_len=64,
-                          kv_cache="int8")
     slot = ServeEngine(api, params, max_batch=4, max_len=64,
                        kv_cache="int8")
-    rb = [bucket.add_request(np.arange(6) + i, max_new=5) for i in range(4)]
     rs = [slot.add_request(np.arange(6) + i, max_new=5) for i in range(4)]
-    ob, os_ = bucket.run(), slot.run()
-    for b, s in zip(rb, rs):
-        assert ob[b] == os_[s]
+    os_ = slot.run()
     assert slot.stats["generated_tokens"] == sum(len(v) for v in os_.values())
     assert slot.stats["kv_bytes"] == kvc.kv_pool_bytes(slot.caches)
-    # and the pool really is smaller than the bf16 pool it replaced, by
+    # the pool really is smaller than the bf16 pool it replaced, by
     # exactly the codec accounting (2D/(D+2) = 1.78x at the smoke model's
     # head_dim 16; the >= 1.9x acceptance number lives at head_dim >= 64 —
     # see test_pool_bytes_ratios and benchmarks/kvcache_bench.py)

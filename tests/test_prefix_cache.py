@@ -2,20 +2,18 @@
 semantics, and greedy token-parity of the prefix-cached engine against the
 uncached slot engine across sharing patterns and cache codecs.
 
-Parity tests run on a briefly trained f32 smoke LM (same recipe as
-tests/test_kvcache.py): token-identity claims only mean something once the
+Parity tests run on the session-trained f32 smoke LM (the ``trained_lm``
+fixture in tests/conftest.py): token-identity claims only mean something once the
 model's greedy argmax gaps sit above fp-reorder noise — the paged decode
 walks the cache in block_size tiles instead of one contiguous slice, which
 reorders the softmax reductions by a few ULPs.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import smoke_config
-from repro.configs.base import PrecisionPolicy
 from repro.models import get_model
 from repro.serving import ServeEngine
 from repro.serving.prefix import PrefixPool
@@ -82,24 +80,10 @@ def test_release_underflow_asserts():
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
-def trained_model():
-    from repro.data.synthetic import SyntheticTokens
-    from repro.optim import adamw_init
-    from repro.train.step import make_train_step
-
-    cfg = smoke_config("stablelm-3b").replace(
-        policy=PrecisionPolicy(), compute_dtype="float32",
-        param_dtype="float32")
-    api = get_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    opt = adamw_init(params)
-    step = jax.jit(make_train_step(api, cfg, peak_lr=1e-3, warmup=20,
-                                   total=200))
-    data = SyntheticTokens(cfg.vocab, 32, 16, seed=0)
-    for _, batch in zip(range(200), data):
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        params, opt, _ = step(params, opt, batch)
-    return cfg, api, params
+def trained_model(trained_lm):
+    """The session-trained smoke LM shared across parity suites (see
+    tests/conftest.py for the training recipe and rationale)."""
+    return trained_lm
 
 
 def _markov(start, n, vocab):

@@ -1,0 +1,176 @@
+"""Hypothesis property tests for the radix prefix cache's invariants
+(serving/prefix.py): whatever interleaving of acquire / release / publish
+/ alloc(+LRU evict) / free a serving schedule produces,
+
+  * refcounts are conserved — every node's ``ref`` equals its outstanding
+    acquires plus unreleased publisher refs, and pinned (ref > 0) nodes
+    are never evicted out of the tree;
+  * blocks are never double-owned — the free list, tree-owned blocks, and
+    request-private blocks partition [0, n_blocks) exactly, with no
+    duplicates anywhere;
+  * ``match`` results are always block-aligned prefixes — the returned
+    chain's tokens concatenate to a prefix of the query, whole blocks
+    only, capped one block short of a fully-cached prompt.
+
+The ops are generated as data (index streams interpreted against the pool
+next to a shadow model), so shrinking yields a minimal op sequence on
+failure. The profile is derandomized: CI runs the same example set every
+time — property coverage without flaky-lane roulette.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.prefix import PrefixPool  # noqa: E402
+
+SET = dict(max_examples=60, deadline=None, derandomize=True)
+
+N_BLOCKS, BS = 8, 4
+
+# one op = (kind, a, b); a/b index into whatever the interpreter has
+OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "free", "publish", "acquire",
+                               "release", "match"]),
+              st.integers(0, 63), st.integers(0, 63)),
+    min_size=1, max_size=80)
+
+
+def _chain_tokens(seed, depth):
+    """Deterministic full-block token path for publish chains: chain
+    ``seed``'s block at depth d is [seed, d, j...] — distinct seeds give
+    distinct subtrees, same seed re-publishes the same path (dedup)."""
+    return tuple((seed * 97 + depth * BS + j) % 251 for j in range(BS))
+
+
+def _check_invariants(pool, private, held):
+    # -- no double-free / exact partition of physical blocks
+    assert len(pool.free) == len(set(pool.free)), "duplicate in free list"
+    tree = {n.block: n for n in pool._walk()}
+    free = set(pool.free)
+    priv = set(private)
+    assert len(priv) == len(private), "duplicate private block"
+    assert not free & set(tree), "block both free and tree-owned"
+    assert not free & priv, "block both free and private"
+    assert not priv & set(tree), "block both private and tree-owned"
+    assert free | set(tree) | priv == set(range(N_BLOCKS))
+    # -- refcount conservation: ref == outstanding acquires/publish refs,
+    #    and every pinned node is still attached to the tree
+    for node, count in held.items():
+        assert node.ref == count, "refcount drifted from ledger"
+        if count > 0:
+            assert node.parent.children.get(node.tokens) is node, \
+                "pinned node evicted"
+    for node in pool._walk():
+        assert node.ref == held.get(node, 0), "untracked ref"
+
+
+def _check_match(pool, tokens):
+    chain = pool.match(tokens)
+    got = [t for n in chain for t in n.tokens]
+    # block-aligned prefix of the query...
+    assert len(got) % BS == 0
+    assert got == [int(t) for t in tokens[:len(got)]]
+    # ...capped so a non-empty suffix always remains to prefill
+    assert len(got) < len(tokens)
+    return chain
+
+
+@given(OPS)
+@settings(**SET)
+def test_pool_invariants_under_random_interleavings(ops):
+    pool = PrefixPool(N_BLOCKS, BS)
+    private = []            # blocks alloc'd to "requests", unpublished
+    held = {}               # node -> outstanding refs we must release
+    chains = {}             # seed -> published chain (shadow for acquire)
+    clock = 0
+    for kind, a, b in ops:
+        clock += 1
+        if kind == "alloc":
+            got = pool.alloc(a % 3 + 1, clock=clock)
+            if got is not None:
+                private.extend(got)
+        elif kind == "free" and private:
+            pool.free_blocks([private.pop(a % len(private))])
+        elif kind == "publish" and private:
+            seed = a % 4
+            chain = chains.setdefault(seed, [])
+            if any(n.parent.children.get(n.tokens) is not n
+                   for n in chain):
+                # an unpinned chain node was LRU-evicted: the shadow
+                # publisher restarts from the root, as a fresh request
+                # (which re-matches before publishing) would
+                chain = chains[seed] = []
+            parent = chain[-1] if chain else None
+            if len(chain) < 4:
+                block = private[b % len(private)]
+                node, owned = pool.publish(
+                    parent, _chain_tokens(seed, len(chain)), block,
+                    clock=clock)
+                if owned:
+                    private.remove(block)
+                held[node] = held.get(node, 0) + 1
+                chain.append(node)
+        elif kind == "acquire" and chains:
+            seed = sorted(chains)[a % len(chains)]
+            chain = chains[seed]
+            if chain:
+                take = chain[:b % len(chain) + 1]
+                # only acquire chains that are still fully attached
+                # (an unpinned chain may have been LRU-evicted; the
+                # engine re-matches every wave, it never acquires blind)
+                if all(n.parent.children.get(n.tokens) is n
+                       for n in take):
+                    pool.acquire(take)
+                    for n in take:
+                        held[n] = held.get(n, 0) + 1
+        elif kind == "release":
+            pinned = [n for n, c in held.items() if c > 0]
+            if pinned:
+                n = pinned[a % len(pinned)]
+                pool.release([n])
+                held[n] -= 1
+        elif kind == "match" and chains:
+            seed = sorted(chains)[a % len(chains)]
+            depth = b % 4 + 1
+            query = [t for d in range(depth)
+                     for t in _chain_tokens(seed, d)] + [7]
+            _check_match(pool, np.asarray(query))
+        _check_invariants(pool, private, held)
+    # drain: releasing every outstanding ref must leave a fully
+    # evictable tree (the all-slots-idle state the engine returns to)
+    for n, c in held.items():
+        for _ in range(c):
+            pool.release([n])
+    assert all(n.ref == 0 for n in pool._walk())
+    got = pool.alloc(N_BLOCKS - len(set(private)))
+    assert got is not None, "idle pool could not evict down to free"
+
+
+@given(st.integers(0, 3), st.integers(1, 17))
+@settings(**SET)
+def test_match_is_always_block_aligned_prefix(seed, qlen):
+    pool = PrefixPool(N_BLOCKS, BS)
+    blocks = pool.alloc(3)
+    parent = None
+    for d in range(3):
+        parent, _ = pool.publish(parent, _chain_tokens(0, d), blocks[d])
+    query = ([t for d in range(3) for t in _chain_tokens(0, d)]
+             if seed == 0 else
+             [t for t in _chain_tokens(seed, 0)] * 3)
+    _check_match(pool, np.asarray(query[:qlen], np.int32))
+
+
+@given(st.integers(1, 8))
+@settings(**SET)
+def test_release_underflow_always_asserts(extra):
+    pool = PrefixPool(2, BS)
+    blk = pool.alloc(1)[0]
+    node, _ = pool.publish(None, _chain_tokens(0, 0), blk)
+    pool.release([node])
+    with pytest.raises(AssertionError):
+        for _ in range(extra):
+            pool.release([node])

@@ -136,6 +136,36 @@ def test_stop_tokens_evict_early(model):
     assert eng.stats["evictions"] == 1
 
 
+def test_stop_token_traffic_generated_tokens_accounting(model):
+    """Regression: ``stats['generated_tokens']`` must equal the sum of
+    emitted token lists under stop-token traffic — every appended token
+    counted exactly once, nothing counted for the discarded remainder of
+    a wave after a stop fires. Covers stops landing mid-decode, on the
+    prefill-sampled first token, and requests that never stop; the
+    multi-token (speculative) wave variant lives in
+    tests/test_spec_decode.py."""
+    cfg, api, params = model
+    base = _greedy_solo(api, params, np.arange(6), 10)
+    eng = ServeEngine(api, params, max_batch=2, max_len=64)
+    rids = [
+        eng.add_request(np.arange(6), max_new=10,
+                        stop_tokens={base[3]}),       # mid-decode stop
+        eng.add_request(np.arange(6), max_new=10,
+                        stop_tokens={base[0]}),       # stops at prefill
+        eng.add_request(np.arange(6) + 1, max_new=7),  # runs to max_new
+        eng.add_request(np.arange(6), max_new=10,
+                        stop_tokens={cfg.vocab + 5}),  # never fires
+    ]
+    res = eng.run()
+    outs = [res[r] for r in rids]
+    assert len(outs[0]) == base.index(base[3]) + 1
+    assert outs[1] == [base[0]]
+    assert len(outs[2]) == 7
+    assert len(outs[3]) == 10
+    assert eng.stats["generated_tokens"] == sum(len(o) for o in outs)
+    assert eng.stats["evictions"] == len(rids)
+
+
 def test_stop_token_on_prefill_sampled_first_token(model):
     cfg, api, params = model
     base = _greedy_solo(api, params, np.arange(6), 10)

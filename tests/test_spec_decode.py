@@ -1,0 +1,237 @@
+"""Speculative decoding with the binarized self-draft: draft construction,
+the multi-token verify step, and engine-level token-identity with the
+non-speculative engine across codecs, pool layouts, and sampling modes.
+
+Token-identity here is the acceptance bar, not a tolerance: every emitted
+token is drawn from *target* logits on the request's own (rid, step) RNG
+stream, so the spec engine may only change how many tokens a wave banks —
+never which tokens. Parity runs on the session-trained smoke LM
+(tests/conftest.py) so argmax margins dominate the ~1e-6 fp reordering
+between the one-pass verify attend and sequential decode.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model
+from repro.serving import ServeEngine
+from repro.serving.spec import binarize_draft_params, draft_param_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _markov(start, n, vocab):
+    out, x = [], start
+    for _ in range(n):
+        out.append(x)
+        x = (x * 7 + 13) % vocab
+    return np.asarray(out, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# accept rule (pure policy, serving/scheduler.py)
+# ---------------------------------------------------------------------------
+
+def test_accept_wave_rule():
+    from repro.serving.scheduler import accept_wave
+    # all k drafts match -> k accepted + bonus token
+    assert accept_wave([5, 6, 7, 8], [5, 6, 7]) == [5, 6, 7, 8]
+    # first mismatch cuts the wave there, emitting the correction token
+    assert accept_wave([5, 9, 7, 8], [5, 6, 7]) == [5, 9]
+    assert accept_wave([4, 6, 7, 8], [5, 6, 7]) == [4]
+    # k = 0 degenerates to plain decode: one candidate, no drafts
+    assert accept_wave([3], []) == [3]
+    # every emitted token is a candidate (never a raw draft)
+    out = accept_wave([1, 2, 3], [9, 9])
+    assert out == [1]
+
+
+# ---------------------------------------------------------------------------
+# draft construction
+# ---------------------------------------------------------------------------
+
+def test_draft_params_alias_and_pack(trained_lm):
+    cfg, api, params = trained_lm
+    draft = binarize_draft_params(params, cfg)
+    # non-FFN leaves are the target arrays BY REFERENCE (no copy)
+    assert draft["embed"]["table"] is params["embed"]["table"]
+    for name, seg in draft["blocks"].items():
+        assert seg["attn"] is params["blocks"][name]["attn"]
+        ffn = seg["ffn"]
+        for k in ("w_gate", "w_up", "w_down"):
+            assert set(ffn[k]) == {"w_packed", "scale"}
+            w = params["blocks"][name]["ffn"][k]["w"]
+            count, din, dout = w.shape
+            assert ffn[k]["w_packed"].shape == (count, dout, -(-din // 32))
+            assert ffn[k]["w_packed"].dtype == jnp.uint32
+            assert ffn[k]["scale"].shape == (count, dout)
+            # absmean scale of the float weight, per output column
+            want = np.abs(np.asarray(w, np.float32)).mean(axis=1)
+            np.testing.assert_allclose(np.asarray(ffn[k]["scale"]),
+                                       want, rtol=1e-6)
+    # the draft's only new residency is the packed bits + scales
+    assert 0 < draft_param_bytes(draft) < params["embed"]["table"].size * 4
+
+
+def test_draft_keeps_already_binary_ffns_as_is():
+    cfg = smoke_config("stablelm-3b")   # policy: middle block binary FFN
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    draft = binarize_draft_params(params, cfg)
+    for name, seg in params["blocks"].items():
+        if "bin_in" in seg["ffn"]:
+            assert draft["blocks"][name]["ffn"] is seg["ffn"]
+
+
+# ---------------------------------------------------------------------------
+# verify step: one pass == sequential decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv", ["bf16", "int8"])
+def test_verify_matches_sequential_decode(trained_lm, kv):
+    cfg, _, params = trained_lm
+    api = get_model(cfg.replace(kv_cache=kv))
+    toks = jnp.asarray([_markov(3, 8, cfg.vocab),
+                        _markov(5, 8, cfg.vocab)], jnp.int32)
+    logits, caches = api.prefill(params, {"tokens": toks}, max_len=32)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    fed, seq_logits, c = [nxt], [], caches
+    for _ in range(3):
+        l, c = api.decode(params, c, fed[-1])
+        seq_logits.append(np.asarray(l, np.float32))
+        fed.append(jnp.argmax(l, -1).astype(jnp.int32)[:, None])
+    _, caches2 = api.prefill(params, {"tokens": toks}, max_len=32)
+    vl, c2 = api.verify(params, caches2, jnp.concatenate(fed[:3], axis=1))
+    vl = np.asarray(vl, np.float32)
+    for j in range(3):
+        # same argmax and near-bitwise logits at every verified position
+        np.testing.assert_array_equal(vl[:, j].argmax(-1),
+                                      seq_logits[j].argmax(-1))
+        np.testing.assert_allclose(vl[:, j], seq_logits[j], atol=1e-4)
+    # verify advanced every slot's cache length by S
+    np.testing.assert_array_equal(np.asarray(c2["seg0"]["len"][0]),
+                                  [11, 11])
+
+
+def test_verify_rejected_for_mla():
+    cfg = smoke_config("minicpm3-4b")
+    api = get_model(cfg)
+    assert api.verify is None
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="verify|GQA"):
+        ServeEngine(api, params, max_batch=2, max_len=32, spec_k=2)
+
+
+def test_spec_headroom_validated():
+    cfg = smoke_config("stablelm-3b")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_batch=2, max_len=32, spec_k=4)
+    with pytest.raises(ValueError, match="spec_k"):
+        eng.add_request(np.arange(20), max_new=10)   # fits only without k
+    eng.add_request(np.arange(18), max_new=10)       # 18+10+4 <= 32
+
+
+# ---------------------------------------------------------------------------
+# engine token-identity matrix: {bf16, int8} x {contiguous, paged} x
+# {greedy, seeded-sampling}, spec (k=3, binary draft) vs non-spec
+# ---------------------------------------------------------------------------
+
+def _outputs(api, params, prompts, *, temperature, max_new=10, **kw):
+    eng = ServeEngine(api, params, max_batch=2, max_len=64,
+                      temperature=temperature, seed=5, **kw)
+    rids = [eng.add_request(p, max_new=max_new) for p in prompts]
+    res = eng.run()
+    return [res[r] for r in rids], eng
+
+
+@pytest.fixture(scope="module")
+def spec_prompts(trained_lm):
+    cfg, _, _ = trained_lm
+    return [_markov(3 + i, 8 + (i % 3), cfg.vocab) for i in range(5)]
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8],
+                         ids=["greedy", "sampled"])
+@pytest.mark.parametrize("pool", ["contiguous", "paged"])
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_spec_token_identical_matrix(trained_lm, spec_prompts, codec, pool,
+                                     temperature):
+    cfg, api, params = trained_lm
+    kw = dict(kv_cache=codec,
+              kv_block_size=8 if pool == "paged" else 0)
+    want, _ = _outputs(api, params, spec_prompts,
+                       temperature=temperature, **kw)
+    got, eng = _outputs(api, params, spec_prompts,
+                        temperature=temperature, spec_k=3, **kw)
+    assert got == want
+    # the draft must actually be doing something: acceptance > 0 and
+    # fewer float passes than tokens-emitting ticks of the plain engine
+    assert eng.acceptance_rate() > 0
+    assert eng.stats["spec_waves"] == eng.stats["decode_steps"]
+    assert eng.stats["spec_drafted"] > 0
+    assert (eng.stats["generated_tokens"]
+            == sum(len(o) for o in got))
+
+
+def test_spec_banks_multiple_tokens_per_wave(trained_lm, spec_prompts):
+    """Greedy on the trained LM: at least some waves must accept drafts,
+    so the spec engine finishes in strictly fewer ticks than the plain
+    engine (the whole point of the subsystem)."""
+    cfg, api, params = trained_lm
+    _, base = _outputs(api, params, spec_prompts, temperature=0.0)
+    _, spec = _outputs(api, params, spec_prompts, temperature=0.0,
+                       spec_k=3)
+    assert spec.stats["decode_steps"] < base.stats["decode_steps"]
+
+
+def test_spec_with_prefix_cache_parity_and_accounting(trained_lm):
+    """Spec waves over the radix prefix cache: shared header blocks stay
+    exact (published blocks are only ever completed by verify's float
+    K/V), outputs match the plain engine, and the pool's block accounting
+    survives multi-token waves."""
+    cfg, api, params = trained_lm
+    header = _markov(3, 24, cfg.vocab)
+    prompts = [np.concatenate([header, _markov(50 + i, 6, cfg.vocab)])
+               for i in range(5)]
+
+    def serve(**kw):
+        eng = ServeEngine(api, params, max_batch=2, max_len=64, **kw)
+        rids = [eng.add_request(prompts[0], max_new=6)]
+        eng.run()
+        rids += [eng.add_request(p, max_new=6) for p in prompts[1:]]
+        res = eng.run()
+        return [res[r] for r in rids], eng
+
+    want, _ = serve()
+    got, eng = serve(kv_block_size=8, prefix_cache=True, spec_k=3)
+    assert got == want
+    assert eng.stats["cached_prompt_tokens"] == 4 * 24
+    assert eng.acceptance_rate() > 0
+    # all slots drained: refcounts zero, blocks partition tree + free
+    assert all(n.ref == 0 for n in eng.pool._walk())
+    assert eng.pool.tree_blocks() + len(eng.pool.free) == eng.n_blocks
+
+
+def test_spec_stop_tokens_mid_wave_discard_and_count(trained_lm,
+                                                     spec_prompts):
+    """A stop token landing mid-wave must cut the request exactly there:
+    the rest of the wave's accepted tokens are discarded (not emitted,
+    not counted) and stats['generated_tokens'] matches the emitted sum —
+    the multi-token-wave case of the stop-token stats regression in
+    tests/test_serving_engine.py."""
+    cfg, api, params = trained_lm
+    base, _ = _outputs(api, params, spec_prompts, temperature=0.0)
+    stop = base[0][2]                       # stops request 0 mid-stream
+    eng = ServeEngine(api, params, max_batch=2, max_len=64, spec_k=3)
+    rids = [eng.add_request(p, max_new=10, stop_tokens={stop})
+            for p in spec_prompts]
+    res = eng.run()
+    outs = [res[r] for r in rids]
+    for b, o in zip(base, outs):
+        want = b[:b.index(stop) + 1] if stop in b else b
+        assert o == want
+    assert eng.stats["generated_tokens"] == sum(len(o) for o in outs)
