@@ -1,6 +1,18 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# ``--json`` additionally writes a machine-readable BENCH_<suite>.json
+# snapshot per suite into the repo root (name/us_per_call/derived rows
+# plus the jax version and backend that produced them) — the recorded
+# perf trajectory ROADMAP item 5 asks for, committed alongside the code
+# change that moved the numbers.
 import argparse
+import json
+import os
 import sys
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
@@ -10,6 +22,9 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: tables,fig2,kernels,attn,roofline,"
                          "serve,prefix,kvcache,spec")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<suite>.json per suite (repo "
+                         "root) with rows + jax version + backend")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -32,12 +47,25 @@ def main() -> None:
     for name, fn in suites:
         if only and name not in only:
             continue
+        rows = []
         try:
             for row in fn(quick=quick):
                 n, us, derived = row
                 print(f"{n},{us:.2f},{derived}")
+                rows.append({"name": n, "us_per_call": round(us, 2),
+                             "derived": str(derived)})
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{e!r}", file=sys.stdout)
+            rows = None
+        if args.json and rows is not None:
+            import jax
+            snap = {"suite": name, "jax": jax.__version__,
+                    "backend": jax.default_backend(), "rows": rows}
+            path = os.path.join(_ROOT, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(snap, f, indent=2)
+                f.write("\n")
+            print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
     sys.stdout.flush()
 
 

@@ -7,11 +7,15 @@ float verify per wave). Outputs are asserted token-identical; reported
 numbers are the acceptance rate (fraction of draft tokens the verify pass
 kept), target-model passes per generated token, and wall-clock tok/s.
 
-On CPU the binary draft lowers through the XLA XNOR twin, which is *not*
-faster than the float matmul at smoke-model sizes — the draft's win there
-is pass-count compression (target passes/token < 1 whenever acceptance
-> 0), which is what the accelerator trade scales with, so both numbers
-are printed side by side.
+The draft wave runs as ONE fused launch (serving/spec.make_draft_wave —
+k scanned binary decodes + rewind + verify + candidate pick), which is
+what moved CPU wall-clock from 0.4x (PR 5: k separate dispatches with a
+host sample round-trip each) past 1.0x: at smoke-model sizes every model
+pass is dispatch-overhead-bound, so a wave that banks ~1 + k*acceptance
+tokens for one launch beats one-launch-per-token even though the XNOR
+twin's popcount is emulated on CPU. Both lowerings of the packed matmul
+(XLA XNOR twin, +-1 int8 MXU twin) are timed side by side with the
+pass-count compression, and the crossover row states the verdict.
 
     PYTHONPATH=src python benchmarks/spec_bench.py
     PYTHONPATH=src python benchmarks/spec_bench.py --spec-k 4 --kv-cache int8
@@ -47,72 +51,126 @@ def _markov_prompts(cfg, n, *, lens=(8, 12, 16), seed=0):
     return prompts
 
 
-def _serve(api, params, prompts, *, max_new, max_batch, max_len, **eng_kw):
+def _serve(api, params, prompts, *, max_new, max_batch, max_len,
+           repeats=3, **eng_kw):
     eng = ServeEngine(api, params, max_batch=max_batch, max_len=max_len,
                       **eng_kw)
-    # warmup: compile every variant on a throwaway same-shape workload
-    warm = ServeEngine(api, params, max_batch=max_batch, max_len=max_len,
-                       **eng_kw)
-    for p in prompts[:max_batch]:
-        warm.add_request(p, max_new=max_new)
-    warm.run()
-    rids = [eng.add_request(p, max_new=max_new) for p in prompts]
-    t0 = time.time()
-    results = eng.run()
-    dt = time.time() - t0
+    # warmup on the SAME engine: run the full workload once so every jit
+    # variant (prefill buckets, decode/spec wave, length resets) compiles
+    # outside the timed region. A throwaway warm engine would NOT work —
+    # each engine wraps its own closures in jax.jit, so a fresh engine
+    # re-traces and the first timed wave would pay compilation.
+    for p in prompts:
+        eng.add_request(p, max_new=max_new)
+    eng.run()
+    # min-of-N: the workload is deterministic (every pass does identical
+    # work), so the minimum is the pass least perturbed by CPU scheduler
+    # noise — which otherwise swings these smoke-scale runs by ~30% and
+    # would decide a marginal crossover by luck.
+    dts = []
+    for _ in range(repeats):
+        rids = [eng.add_request(p, max_new=max_new) for p in prompts]
+        pre = dict(eng.stats)
+        t0 = time.time()
+        results = eng.run()
+        dts.append(time.time() - t0)
+    dt = min(dts)
     outs = [results[r] for r in rids]
-    return outs, sum(len(o) for o in outs), dt, eng
+    delta = {k: eng.stats[k] - pre[k] for k in pre
+             if isinstance(pre[k], int)}
+    return outs, sum(len(o) for o in outs), dt, eng, delta
 
 
 def run(quick: bool = True, *, requests: int | None = None,
-        max_batch: int = 4, spec_k: int = 3, max_new: int = 12,
-        kv_cache: str = "bf16", kv_block_size: int = 0, seed: int = 0):
+        max_batch: int = 4, spec_k: int = 4, max_new: int = 24,
+        kv_cache: str = "bf16", kv_block_size: int = 0, seed: int = 0,
+        train_steps: int = 5000, draft_impls=("xla_xnor", "int8_mxu")):
     from benchmarks.serve_bench import _trained_smoke_lm
 
     requests = requests if requests is not None else (12 if quick else 32)
-    cfg, api, params = _trained_smoke_lm()
+    # train_steps=5000 (not serve_bench's 200-step default): the draft
+    # only agrees with the target where binarization error sits below the
+    # argmax margin, and a 200-step model's margins are still noise-level
+    # — acceptance then measures the *model's* indecision (~27%), not the
+    # draft. The affine-Markov map is deterministic, so margins keep
+    # sharpening with steps and acceptance converges toward the
+    # binarization trade: ~65% at 2000 steps, ~82% at 5000 (k=4, where
+    # the wave economics peak on CPU: 1 + k*acc tokens banked per wave
+    # vs ~1 + 0.6k plain-tick-equivalents of wave cost).
+    cfg, api, params = _trained_smoke_lm(steps=train_steps)
     prompts = _markov_prompts(cfg, requests, seed=seed)
     max_len = max(len(p) for p in prompts) + max_new + spec_k + 8
 
-    base_out, btoks, bdt, beng = _serve(
+    base_out, btoks, bdt, beng, bdelta = _serve(
         api, params, prompts, max_new=max_new, max_batch=max_batch,
         max_len=max_len, kv_cache=kv_cache, kv_block_size=kv_block_size)
-    spec_out, stoks, sdt, seng = _serve(
-        api, params, prompts, max_new=max_new, max_batch=max_batch,
-        max_len=max_len, kv_cache=kv_cache, kv_block_size=kv_block_size,
-        spec_k=spec_k)
-    assert spec_out == base_out, "speculative outputs diverged from baseline"
+    rows = [("spec/base_tok_s", bdt / btoks * 1e6,
+             f"{btoks / bdt:.1f} tok/s")]
+    best = (None, 0.0)
+    for impl in draft_impls:
+        spec_out, stoks, sdt, seng, sdelta = _serve(
+            api, params, prompts, max_new=max_new, max_batch=max_batch,
+            max_len=max_len, kv_cache=kv_cache,
+            kv_block_size=kv_block_size, spec_k=spec_k,
+            spec_draft_impl=impl)
+        assert spec_out == base_out, (
+            f"speculative outputs diverged from baseline (impl={impl})")
+        # the k-dispatch -> 1-launch reduction: the fused draft scan costs
+        # exactly one device launch per wave (PR 5 paid k, plus a host
+        # sample round-trip between each)
+        assert sdelta["spec_draft_launches"] == sdelta["spec_waves"], (
+            sdelta["spec_draft_launches"], sdelta["spec_waves"])
+        if impl == draft_impls[0]:
+            acc = seng.acceptance_rate()
+            base_passes = bdelta["decode_steps"]
+            spec_passes = sdelta["spec_waves"]
+            rows += [
+                ("spec/acceptance_rate", 0.0,
+                 f"{acc * 100:.1f}% ({seng.stats['spec_accepted']}"
+                 f"/{seng.stats['spec_drafted']} drafts kept; k={spec_k})"),
+                # batched target-model passes — the number the binary
+                # draft compresses: one float pass per tick plain, one
+                # float verify per wave speculative
+                ("spec/float_passes", 0.0,
+                 f"{base_passes} -> {spec_passes} batched target passes "
+                 f"({base_passes / spec_passes:.2f}x fewer)"),
+                ("spec/draft_launches", 0.0,
+                 f"{sdelta['spec_draft_launches']} fused draft launches "
+                 f"for {spec_passes} waves (1/wave; unfused would be "
+                 f"{spec_k}/wave)"),
+            ]
+        speedup = bdt / sdt
+        rows.append((f"spec/spec_tok_s[{impl}]", sdt / stoks * 1e6,
+                     f"{stoks / sdt:.1f} tok/s ({speedup:.2f}x vs "
+                     "baseline)"))
+        if speedup > best[1]:
+            best = (impl, speedup)
+    rows.append(("spec/crossover", 0.0,
+                 f"hybrid {'wins' if best[1] >= 1.0 else 'loses'} "
+                 f"wall-clock on {_backend()}: best {best[1]:.2f}x "
+                 f"(impl={best[0]}, k={spec_k})"))
+    return rows
 
-    acc = seng.acceptance_rate()
-    # batched target-model passes for the whole workload — the number the
-    # binary draft compresses: the plain engine runs one float pass per
-    # tick, the spec engine one float verify per wave (draft passes run
-    # in binary mode)
-    base_passes = beng.stats["decode_steps"]
-    spec_passes = seng.stats["spec_waves"]
-    return [
-        ("spec/acceptance_rate", 0.0,
-         f"{acc * 100:.1f}% ({seng.stats['spec_accepted']}"
-         f"/{seng.stats['spec_drafted']} drafts kept; k={spec_k})"),
-        ("spec/float_passes", 0.0,
-         f"{base_passes} -> {spec_passes} batched target passes "
-         f"({base_passes / spec_passes:.2f}x fewer)"),
-        ("spec/base_tok_s", bdt / btoks * 1e6, f"{btoks / bdt:.1f} tok/s"),
-        ("spec/spec_tok_s", sdt / stoks * 1e6,
-         f"{stoks / sdt:.1f} tok/s ({bdt / sdt:.2f}x vs baseline)"),
-    ]
+
+def _backend():
+    import jax
+    return jax.default_backend()
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--spec-k", type=int, default=3)
-    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--train-steps", type=int, default=5000)
     ap.add_argument("--kv-cache", default="bf16",
                     choices=["bf16", "int8", "binary"])
     ap.add_argument("--kv-block-size", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--draft-impls", default="xla_xnor,int8_mxu",
+                    help="comma list of packed-matmul lowerings to time "
+                         "(kernels/ops.py SPEC_DRAFT_IMPLS)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for n, us, derived in run(requests=args.requests,
@@ -120,7 +178,10 @@ def main():
                               spec_k=args.spec_k, max_new=args.max_new,
                               kv_cache=args.kv_cache,
                               kv_block_size=args.kv_block_size,
-                              seed=args.seed):
+                              seed=args.seed,
+                              train_steps=args.train_steps,
+                              draft_impls=tuple(
+                                  args.draft_impls.split(","))):
         print(f"{n},{us:.2f},{derived}")
 
 

@@ -100,6 +100,13 @@ class ModelConfig:
     # implemented in serving/kvcache.py. MLA's compressed cache is already
     # the memory optimization for that family and stays bf16.)
     kv_cache: str = "auto"
+    # Packed-weight lowering for the binarized self-draft of speculative
+    # decoding: auto | xla_xnor | int8_mxu | pallas_xnor (kernels/ops.py
+    # SPEC_DRAFT_IMPLS). auto keeps resolve_impl's backend default (XLA
+    # XNOR twin on CPU, Pallas popcount kernel on TPU); int8_mxu lowers
+    # sign bits to +-1 int8 dot_general — the MXU path. All lowerings are
+    # exact-int32 twins, so the knob is pure wall-clock, never tokens.
+    spec_draft_impl: str = "auto"
     shard_kv_heads: bool = True       # False: replicate wk/wv over model
     serve_cache_sharding: str = "explicit"  # explicit | auto (GSPMD picks)
     serve_mesh: str = ""              # e.g. "32x8": recarve pod for serving

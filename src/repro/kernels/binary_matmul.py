@@ -9,6 +9,12 @@ doubles as the BEANNA partial-sum accumulator BRAM).
 VMEM budget per step (defaults bm=bn=256, bk=8):
   a tile 256*8*4 B = 8 KiB, w tile 8 KiB, out tile 256*256*4 B = 256 KiB,
   loop intermediate (bm, bn) int32 = 256 KiB  -> well under the ~16 MiB VMEM.
+
+``binary_matmul_int8`` below is the same logical op lowered for hardware
+*without* cheap popcount: sign bits become +-1 int8 and the contraction runs
+as a dot_general with int32 accumulation — on TPU that is the MXU at its
+int8 rate (2x bf16 peak), with weights still bit-packed in HBM and the
+unpack a shift/mask on the way into the systolic array.
 """
 
 from __future__ import annotations
@@ -18,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.binarize import unpack_bits
 
 
 def _kernel(pa_ref, pw_ref, out_ref, *, k_total: int, bk: int, nk: int):
@@ -69,3 +77,23 @@ def binary_matmul_pallas(pa: jax.Array, pw: jax.Array, *, k: int,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(pa, pw)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def binary_matmul_int8(a: jax.Array, pw: jax.Array, *,
+                       k: int | None = None) -> jax.Array:
+    """a (M, K) int8 in {-1, +1}, pw (N, Kp) uint32 -> (M, N) int32.
+
+    The +-1 int8 MXU twin of the XNOR-popcount kernel: weight sign bits
+    lower to +-1 int8 and the contraction is a ``dot_general`` with int32
+    accumulation — the TPU-friendly path where popcount hardware is absent
+    (the MXU's int8 rate is 2x bf16 peak; the VPU popcount loop is
+    lane-serial). Weights stay bit-packed at rest (16x smaller than bf16);
+    padding lanes are sliced off after the unpack, so any K — including
+    K % 32 != 0 — is exact int32, bit-identical to ``binary_matmul_pallas``
+    and the XLA XNOR twin (``kernels/ref.binary_matmul_packed_ref``).
+    """
+    k = k if k is not None else a.shape[-1]
+    w = unpack_bits(pw, k, dtype=jnp.int8)          # (N, K) in {-1, +1}
+    return jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)

@@ -24,8 +24,14 @@ import jax.numpy as jnp
 
 from repro.core.binarize import pack_bits, pack_signs_int8
 from repro.kernels import ref as kref
-from repro.kernels.binary_matmul import binary_matmul_pallas
+from repro.kernels.binary_matmul import binary_matmul_int8, binary_matmul_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
+
+# packed-weight lowering choices for the binary self-draft (threaded from
+# ModelConfig.spec_draft_impl down to nn/layers.dense_apply): "auto" keeps
+# the resolve_impl default (XLA XNOR twin on CPU, Pallas popcount kernel
+# elsewhere); "int8_mxu" is the +-1 int8 dot_general MXU twin.
+SPEC_DRAFT_IMPLS = ("auto", "xla_xnor", "int8_mxu", "pallas_xnor")
 
 
 def resolve_impl(mode: str, impl: str = "auto") -> str:
@@ -202,10 +208,10 @@ def binary_dense_packed(x: jax.Array, w_packed: jax.Array, k: int, *,
     elif impl == "pallas_xnor":
         y = binary_matmul_pallas(pack_bits(x2d), w_packed, k=k,
                                  interpret=jax.default_backend() == "cpu")
-    elif impl == "xla_int8":
-        from repro.core.binarize import unpack_bits
-        w = unpack_bits(w_packed, k, dtype=jnp.int8)
-        y = kref.int8_matmul_ref(pack_signs_int8(x2d), w)
+    elif impl in ("xla_int8", "int8_mxu"):
+        # +-1 int8 MXU twin: activations sign-pack to int8 directly, the
+        # bit-packed weight unpacks on the way into the dot_general
+        y = binary_matmul_int8(pack_signs_int8(x2d), w_packed, k=k)
     elif impl == "pallas_int8":
         y = int8_matmul_pallas(pack_signs_int8(x2d), w_packed,
                                interpret=jax.default_backend() == "cpu")

@@ -55,6 +55,13 @@ def main(argv=None):
                          "through the binarized self-draft and verify "
                          "them in one float pass (0 = off; slot engine, "
                          "GQA archs only)")
+    ap.add_argument("--spec-draft-impl", default=None,
+                    choices=["auto", "xla_xnor", "int8_mxu", "pallas_xnor"],
+                    help="packed-matmul lowering for the binary draft "
+                         "(kernels/ops.py SPEC_DRAFT_IMPLS; auto = XLA "
+                         "XNOR twin on CPU, Pallas popcount on TPU; "
+                         "int8_mxu = +-1 int8 dot_general). All lowerings "
+                         "are exact-int32 twins: tokens never change")
     ap.add_argument("--draft", default="binary",
                     choices=["binary", "none"],
                     help="speculative draft model: 'binary' = the served "
@@ -94,7 +101,8 @@ def main(argv=None):
                   attn_impl=args.attn_impl, kv_cache=args.kv_cache,
                   kv_block_size=args.kv_block_size,
                   prefix_cache=args.prefix_cache,
-                  spec_k=spec_k, spec_draft="binary")
+                  spec_k=spec_k, spec_draft="binary",
+                  spec_draft_impl=args.spec_draft_impl)
     else:
         if args.kv_block_size or args.prefix_cache or stop or spec_k:
             ap.error("--kv-block-size/--prefix-cache/--stop-tokens/"

@@ -79,11 +79,16 @@ def ffn_apply(p, x, cfg: ModelConfig):
         h = wlc(h, ("batch", "seq", "mlp"))
         y = binary_dense_apply_any(p["bin_out"], h, mode=mode)
         return y.astype(x.dtype)
-    h = nn.dense_apply(p["w_gate"], x, compute_dtype=cdt(cfg))
-    u = nn.dense_apply(p["w_up"], x, compute_dtype=cdt(cfg))
+    # binary_impl only matters when these dicts are sign-packed draft
+    # weights (serving/spec.binarize_draft_params) — float denses ignore it
+    h = nn.dense_apply(p["w_gate"], x, compute_dtype=cdt(cfg),
+                       binary_impl=cfg.spec_draft_impl)
+    u = nn.dense_apply(p["w_up"], x, compute_dtype=cdt(cfg),
+                       binary_impl=cfg.spec_draft_impl)
     h = jax.nn.silu(h.astype(jnp.float32)).astype(cdt(cfg)) * u
     h = wlc(h, ("batch", "seq", "mlp"))
-    return nn.dense_apply(p["w_down"], h, compute_dtype=cdt(cfg))
+    return nn.dense_apply(p["w_down"], h, compute_dtype=cdt(cfg),
+                          binary_impl=cfg.spec_draft_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -109,9 +114,12 @@ def gqa_init(key, cfg: ModelConfig):
 def gqa_qkv(p, x, cfg: ModelConfig, positions):
     b, s, _ = x.shape
     dh = cfg.kv_head_dim()
-    q = nn.dense_apply(p["wq"], x, compute_dtype=cdt(cfg))
-    k = nn.dense_apply(p["wk"], x, compute_dtype=cdt(cfg))
-    v = nn.dense_apply(p["wv"], x, compute_dtype=cdt(cfg))
+    q = nn.dense_apply(p["wq"], x, compute_dtype=cdt(cfg),
+                       binary_impl=cfg.spec_draft_impl)
+    k = nn.dense_apply(p["wk"], x, compute_dtype=cdt(cfg),
+                       binary_impl=cfg.spec_draft_impl)
+    v = nn.dense_apply(p["wv"], x, compute_dtype=cdt(cfg),
+                       binary_impl=cfg.spec_draft_impl)
     q = q.reshape(b, s, cfg.n_heads, dh)
     k = k.reshape(b, s, cfg.n_kv_heads, dh)
     v = v.reshape(b, s, cfg.n_kv_heads, dh)
@@ -132,7 +140,8 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions):
     o = attn_lib.prefill_attention(q, k, v, chunk=cfg.attn_chunk,
                                    impl=cfg.attn_impl)
     o = o.reshape(*x.shape[:2], -1)
-    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg))
+    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg),
+                          binary_impl=cfg.spec_draft_impl)
 
 
 def gqa_decode(p, x, cfg: ModelConfig, cache):
@@ -151,7 +160,8 @@ def gqa_decode(p, x, cfg: ModelConfig, cache):
         cache = codec.insert_timestep(cache, k, v, method=cfg.cache_update)
         o = codec.decode_attention(q, cache, impl=cfg.attn_impl)
     o = o.reshape(*x.shape[:2], -1)
-    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
+    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg),
+                          binary_impl=cfg.spec_draft_impl), cache
 
 
 def gqa_verify(p, x, cfg: ModelConfig, cache):
@@ -177,7 +187,8 @@ def gqa_verify(p, x, cfg: ModelConfig, cache):
         cache = codec.insert_span(cache, k, v, method=cfg.cache_update)
         o = codec.decode_attention(q, cache, q_lens=q_lens)
     o = o.reshape(*x.shape[:2], -1)
-    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg)), cache
+    return nn.dense_apply(p["wo"], o, compute_dtype=cdt(cfg),
+                          binary_impl=cfg.spec_draft_impl), cache
 
 
 # ---------------------------------------------------------------------------
@@ -428,7 +439,8 @@ def block_prefill(p, x, cfg: ModelConfig, sig: BlockSig, *, positions,
                                            kv_len=seq_lens,
                                            impl=cfg.attn_impl)
         a = nn.dense_apply(p["attn"]["wo"], o.reshape(b, s, -1),
-                           compute_dtype=cdt(cfg))
+                           compute_dtype=cdt(cfg),
+                           binary_impl=cfg.spec_draft_impl)
         # encode k/v into the configured cache codec (bf16 layout for
         # "auto"; int8/binary quantize at prefill time so the pool never
         # holds a dense bf16 copy)

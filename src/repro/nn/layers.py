@@ -31,7 +31,7 @@ def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
     return p
 
 
-def dense_apply(p, x, *, compute_dtype=jnp.bfloat16):
+def dense_apply(p, x, *, compute_dtype=jnp.bfloat16, binary_impl="auto"):
     if "w_packed" in p:
         # Binarized draft weights (serving/spec.py): XNOR-net style
         # forward  x @ W ~= (sign(x) @ sign(W)) * beta * alpha  with
@@ -41,11 +41,14 @@ def dense_apply(p, x, *, compute_dtype=jnp.bfloat16):
         # correction, Pallas-vs-XLA impl resolution — is the deploy
         # path's (core/binary_dense), shared, not re-implemented here.
         # Structural dispatch keeps every float call site — FFN, QKV/O —
-        # draft-capable without threading a flag.
+        # draft-capable without threading a flag; ``binary_impl`` picks
+        # the packed lowering (ModelConfig.spec_draft_impl: "auto" |
+        # "xla_xnor" | "int8_mxu" | "pallas_xnor" — all exact-int32
+        # twins, so the choice is pure wall-clock).
         from repro.core.binary_dense import binary_dense_apply_packed
         xf = x.astype(jnp.float32)
         beta = jnp.mean(jnp.abs(xf), axis=-1, keepdims=True)
-        y = binary_dense_apply_packed(p, xf) * beta
+        y = binary_dense_apply_packed(p, xf, impl=binary_impl) * beta
         if "b" in p:
             y = y + p["b"].astype(jnp.float32)
         return y.astype(compute_dtype)

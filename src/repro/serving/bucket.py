@@ -28,12 +28,17 @@ class Request:
 class BucketEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 attn_impl: str | None = None, kv_cache: str | None = None):
+                 attn_impl: str | None = None, kv_cache: str | None = None,
+                 spec_draft_impl: str | None = None):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
         if kv_cache is not None:
             overrides["kv_cache"] = kv_cache
+        if spec_draft_impl is not None:
+            # no speculation here, but the knob rides the same seam as
+            # attn_impl so config plumbing is engine-agnostic
+            overrides["spec_draft_impl"] = spec_draft_impl
         if overrides:
             from repro.models import get_model
             api = get_model(api.cfg.replace(**overrides))

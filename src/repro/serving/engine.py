@@ -49,6 +49,15 @@ by construction — each emitted token is drawn from target logits at its
 own (rid, step) stream — and cache rollback is a per-slot length reset:
 rejected positions sit past ``len``, invisible to every masked read, and
 are overwritten by later waves.
+
+The whole wave runs as ONE jitted launch (serving/spec.make_spec_wave):
+the k draft decodes are a ``lax.scan`` with on-device token picks, the
+rewind, the verify pass, and candidate selection fused behind it — two
+dispatches per wave (wave + accept-driven length reset) where PR 5 paid
+2k+3 with a host sample round-trip between every draft step.
+``spec_draft_impl`` picks the packed-matmul lowering inside the draft
+("auto" | "xla_xnor" | "int8_mxu" | "pallas_xnor" — exact-int32 twins,
+see kernels/ops.py), threaded through ``ModelConfig`` like ``attn_impl``.
 """
 
 from __future__ import annotations
@@ -81,12 +90,20 @@ class ServeEngine:
                  min_bucket: int = 8, attn_impl: str | None = None,
                  kv_cache: str | None = None, kv_block_size: int = 0,
                  prefix_cache: bool = False, n_blocks: int | None = None,
-                 spec_k: int = 0, spec_draft: str = "binary"):
+                 spec_k: int = 0, spec_draft: str = "binary",
+                 spec_draft_impl: str | None = None):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
         if kv_cache is not None:
             overrides["kv_cache"] = kv_cache
+        if spec_draft_impl is not None:
+            from repro.kernels.ops import SPEC_DRAFT_IMPLS
+            if spec_draft_impl not in SPEC_DRAFT_IMPLS:
+                raise ValueError(
+                    f"unknown spec_draft_impl {spec_draft_impl!r}: "
+                    f"expected one of {SPEC_DRAFT_IMPLS}")
+            overrides["spec_draft_impl"] = spec_draft_impl
         if overrides:
             # rebind every model fn to the requested attention backend /
             # cache codec (api closures capture cfg, so a fresh api is the
@@ -168,6 +185,10 @@ class ServeEngine:
                       "generated_tokens": 0, "prefilled_tokens": 0,
                       "cached_prompt_tokens": 0,
                       "spec_waves": 0, "spec_drafted": 0, "spec_accepted": 0,
+                      # device launches spent drafting: 1 per wave with the
+                      # fused draft scan (PR 5 spent k per wave) — the
+                      # dispatch-count reduction benchmarks assert on
+                      "spec_draft_launches": 0,
                       "kv_bytes": kv_pool_bytes(self.caches)}
         # the pool cache is donated: step/admit immediately rebind
         # self.caches, so XLA can update the (layers, B, T, ...) buffers in
@@ -206,31 +227,23 @@ class ServeEngine:
 
         self._sample_rows = jax.jit(sample_rows)
 
-        def sample_rows_wave(rids, base_steps, logits, t):
-            # verify-wave sampling: position j of row r draws from the
-            # same per-request stream the non-speculative engine would
-            # use for its (len(out)+j)-th token — same fold_in chain,
-            # same categorical over a (V,) row, so a given logits row
-            # yields the identical token bit for bit
-            def one(rid, b0, rows):
-                def pos(j, row):
-                    k = jax.random.fold_in(
-                        jax.random.fold_in(seed_key, rid), b0 + j)
-                    return jax.random.categorical(k, row / t)
-
-                return jax.vmap(pos)(jnp.arange(rows.shape[0]), rows)
-
-            return jax.vmap(one)(rids, base_steps, logits).astype(jnp.int32)
-
-        self._sample_rows_wave = jax.jit(sample_rows_wave)
-
         self.spec_k = int(spec_k)
         if self.spec_k:
-            from repro.serving.spec import binarize_draft_params
+            from repro.serving.spec import binarize_draft_params, \
+                make_spec_wave
             # the draft aliases every non-FFN target array; only the
             # packed sign bits + absmean scales are new residency
             self.draft_params = binarize_draft_params(params, api.cfg)
-            self._verify_step = jax.jit(api.verify, donate_argnums=1)
+            # the whole wave — k scanned draft decodes, rewind, float
+            # verify, candidate selection — is ONE jitted launch (PR 5
+            # dispatched each draft step separately with a host sample
+            # round-trip in between: 2k+3 dispatches per wave, and the
+            # dispatch overhead is what kept hybrid at 0.4x wall-clock)
+            self._spec_wave = jax.jit(
+                make_spec_wave(api, k=self.spec_k,
+                               temperature=float(temperature),
+                               seed_key=self._seed_key),
+                donate_argnums=2)
             self._set_lens = jax.jit(kvc.set_cache_lengths,
                                      donate_argnums=0)
 
@@ -260,39 +273,25 @@ class ServeEngine:
 
     # -- sampling -----------------------------------------------------------
 
-    def _sample(self, logits, reqs, step_offset: int = 0):
+    def _sample(self, logits, reqs):
         """reqs: one Request (or None for free/dummy rows) per logits row.
 
         Greedy is a pure argmax. Stochastic sampling draws row r from the
         request's own stream — fold_in(fold_in(seed, rid), len(out)) — so
         tokens don't depend on which other rows happen to share the call.
         Free/dummy rows draw from (rid 0, step 0); their tokens are never
-        read. step_offset shifts every stream index forward (the draft
-        phase guessing the wave's j-th emission before anything appends).
+        read. (Speculative waves sample inside the fused launch —
+        serving/spec.make_spec_wave — with the same per-row streams.)
         """
         if self.temperature <= 0:
             return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         rids = np.asarray([r.rid if r is not None else 0 for r in reqs],
                           np.int32)
-        steps = np.asarray([len(r.out) + step_offset if r is not None else 0
+        steps = np.asarray([len(r.out) if r is not None else 0
                             for r in reqs], np.int32)
         return np.asarray(self._sample_rows(jnp.asarray(rids),
                                             jnp.asarray(steps), logits,
                                             float(self.temperature)))
-
-    def _sample_wave(self, logits, reqs):
-        """Candidate tokens for a verify wave: logits (B, S, V); position
-        (r, j) draws from stream (rid, len(out)+j) — exactly the token the
-        non-speculative engine would emit as the request's next j-th."""
-        if self.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        rids = np.asarray([r.rid if r is not None else 0 for r in reqs],
-                          np.int32)
-        base = np.asarray([len(r.out) if r is not None else 0
-                           for r in reqs], np.int32)
-        return np.asarray(self._sample_rows_wave(jnp.asarray(rids),
-                                                 jnp.asarray(base), logits,
-                                                 float(self.temperature)))
 
     # -- slot lifecycle -----------------------------------------------------
 
@@ -543,33 +542,30 @@ class ServeEngine:
         if not active:
             return False
         k = self.spec_k
-        reqs = list(self.slots)
         # pre-wave cache length per slot (invariant: plen + len(out) - 1;
         # next_tok's K/V is not yet inserted). Free slots pin to 0 so
-        # their draft-scratch writes stay invisible and bounded.
+        # their draft-scratch writes stay invisible and bounded; their
+        # rid/step pins are arbitrary (their tokens are never read).
         base_len = np.zeros((self.max_batch,), np.int32)
+        rids = np.zeros((self.max_batch,), np.int32)
+        base_steps = np.zeros((self.max_batch,), np.int32)
         for i in active:
             r = self.slots[i]
             base_len[i] = len(r.prompt) + len(r.out) - 1
+            rids[i] = r.rid
+            base_steps[i] = len(r.out)
 
-        # -- draft: k binary-mode decode steps appending approximate K/V
-        toks = [self.next_tok.copy()]                   # t0 = last emitted
-        cur = jnp.asarray(self.next_tok)
-        for j in range(k):
-            logits, self.caches = self._decode(self.draft_params,
-                                               self.caches, cur)
-            nxt = self._sample(logits, reqs, step_offset=j)
-            toks.append(np.asarray(nxt)[:, None])
-            cur = jnp.asarray(toks[-1])
-        # rewind: the draft's K/V (positions base_len..base_len+k-1) drop
-        # out of every masked read before verify overwrites them
-        self.caches = self._set_lens(self.caches, jnp.asarray(base_len))
-
-        # -- verify: one pass scores k+1 positions with exact K/V
-        tok_mat = np.concatenate(toks, axis=1)          # (B, k+1)
-        logits_v, self.caches = self._verify_step(self.params, self.caches,
-                                                  jnp.asarray(tok_mat))
-        cand = self._sample_wave(logits_v, reqs)        # (B, k+1)
+        # -- one fused launch: k scanned draft decodes (approximate K/V
+        # appended past base_len), rewind, one float verify scoring k+1
+        # positions with exact K/V, candidate selection from each
+        # request's own (rid, step) stream
+        tok_mat, cand, self.caches = self._spec_wave(
+            self.params, self.draft_params, self.caches,
+            jnp.asarray(self.next_tok), jnp.asarray(rids),
+            jnp.asarray(base_steps), jnp.asarray(base_len))
+        tok_mat = np.asarray(tok_mat)                   # (B, k+1)
+        cand = np.asarray(cand)                         # (B, k+1)
+        self.stats["spec_draft_launches"] += 1
 
         # -- accept/reject (host): longest draft prefix matching the
         # request's own-stream emissions, then one correction/bonus token

@@ -31,9 +31,11 @@ cache rollback is a per-slot length reset (see ServeEngine._step_spec).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import pack_bits
+from repro.serving.kvcache import set_cache_lengths
 
 
 def _pack_dense(p):
@@ -86,6 +88,112 @@ def binarize_draft_params(params, cfg, *, attn_proj: bool = False):
     out = dict(params)
     out["blocks"] = blocks
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused draft wave: k binary decode steps as ONE launch
+# ---------------------------------------------------------------------------
+
+def make_draft_wave(api, *, k: int, temperature: float = 0.0,
+                    seed_key=None):
+    """Build the fused draft wave: all ``k`` binary draft decode steps as a
+    single ``lax.scan``-structured computation instead of k separate
+    ``ModelApi.decode`` dispatches.
+
+    PR 5 ran the draft as k jitted decode calls with a host round-trip
+    between each (the sampled token had to come back to feed the next
+    step). At smoke scale that dispatch + sync overhead, not FLOPs, is
+    what kept the hybrid path at 0.4x the plain engine. Scanning the k
+    steps keeps the packed MLP weights resident and the inter-step token
+    hand-off on device: activations pack, XNOR/int8-matmul, and the
+    per-step attention all live inside one launch.
+
+    The returned ``wave(draft_params, caches, first_tok, rids,
+    base_steps)`` maps ((B,1) last-emitted tokens, per-row request ids,
+    per-row stream offsets) to ``(toks (B, k+1) int32, caches)`` where
+    ``toks[:, 0]`` echoes ``first_tok`` and ``toks[:, 1:]`` are the k
+    draft proposals. Token picks replicate the engine's host-side
+    ``_sample`` exactly: greedy argmax at temperature 0, else row r's
+    step-j token draws from fold_in(fold_in(seed, rids[r]),
+    base_steps[r] + j) — per-row streams, so free/padded rows can never
+    perturb live ones. The caches come back with the draft's approximate
+    K/V appended (positions base_len..base_len+k-1); the caller rewinds
+    with ``set_cache_lengths`` before verify, exactly as the unfused
+    engine did. No rewind inside: that keeps this wave testable
+    one-for-one against k sequential ``api.decode`` calls.
+    """
+    def pick(logits, rids, steps):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def one(rid, step, row):
+            key = jax.random.fold_in(jax.random.fold_in(seed_key, rid),
+                                     step)
+            return jax.random.categorical(key, row / temperature)
+
+        return jax.vmap(one)(rids, steps, logits).astype(jnp.int32)
+
+    def wave(draft_params, caches, first_tok, rids, base_steps):
+        def step(carry, j):
+            caches, cur = carry
+            logits, caches = api.decode(draft_params, caches, cur)
+            nxt = pick(logits, rids, base_steps + j)
+            return (caches, nxt[:, None]), nxt
+
+        (caches, _), drafts = jax.lax.scan(
+            step, (caches, first_tok), jnp.arange(k))
+        toks = jnp.concatenate([first_tok, drafts.T], axis=1)  # (B, k+1)
+        return toks, caches
+
+    return wave
+
+
+def make_spec_wave(api, *, k: int, temperature: float = 0.0,
+                   seed_key=None):
+    """Fuse a whole speculative wave — draft scan, cache rewind, float
+    verify, candidate selection — into one jittable function.
+
+    Under jit the engine's spec tick becomes two dispatches (this wave +
+    the accept-driven length reset) instead of 2k+3 (k draft decodes with
+    k host samples between them, a rewind, a verify, a wave sample).
+
+    Returns ``wave(params, draft_params, caches, first_tok, rids,
+    base_steps, base_lens) -> (toks (B, k+1), cand (B, k+1), caches)``:
+    ``toks`` is the draft wave (first_tok + k proposals), ``cand[r, j]``
+    the token the *target* would emit at position j from its own
+    (rid, base_step + j) stream — the accept/reject inputs, compared on
+    host by ``scheduler.accept_wave``. The caches return with the verify
+    pass's exact K/V inserted and ``len`` advanced by k+1; the caller
+    rolls back to base + accepted, unchanged from the unfused path.
+    """
+    draft_wave = make_draft_wave(api, k=k, temperature=temperature,
+                                 seed_key=seed_key)
+
+    def wave(params, draft_params, caches, first_tok, rids, base_steps,
+             base_lens):
+        toks, caches = draft_wave(draft_params, caches, first_tok, rids,
+                                  base_steps)
+        # rewind: the draft's approximate K/V (positions
+        # base_len..base_len+k-1) drop out of every masked read before
+        # verify overwrites them with exact entries
+        caches = set_cache_lengths(caches, base_lens)
+        logits_v, caches = api.verify(params, caches, toks)
+        if temperature <= 0:
+            cand = jnp.argmax(logits_v, axis=-1).astype(jnp.int32)
+        else:
+            def one(rid, b0, rows):
+                def pos(j, row):
+                    key = jax.random.fold_in(
+                        jax.random.fold_in(seed_key, rid), b0 + j)
+                    return jax.random.categorical(key, row / temperature)
+
+                return jax.vmap(pos)(jnp.arange(rows.shape[0]), rows)
+
+            cand = jax.vmap(one)(rids, base_steps,
+                                 logits_v).astype(jnp.int32)
+        return toks, cand, caches
+
+    return wave
 
 
 def draft_param_bytes(params) -> int:

@@ -9,7 +9,8 @@ import pytest
 from repro.core.binarize import pack_bits, pack_signs_int8
 from repro.kernels import ref as kref
 from repro.kernels.bf16_matmul import bf16_matmul_pallas
-from repro.kernels.binary_matmul import binary_matmul_pallas
+from repro.kernels.binary_matmul import (binary_matmul_int8,
+                                         binary_matmul_pallas)
 from repro.kernels.hybrid_dense import hybrid_dense_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 
@@ -41,6 +42,43 @@ def test_binary_matmul_kernel_block_shapes(bm, bn, bk):
     got = binary_matmul_pallas(pa, pw, k=k, bm=bm, bn=bn, bk=bk,
                                interpret=True)
     np.testing.assert_array_equal(np.asarray(gold), np.asarray(got))
+
+
+# rect + square shapes, including K not a multiple of the 32-bit lane
+# (100 -> 4 packed lanes of which 28 bits are padding; 250 -> 8 lanes /
+# 6 pad bits; 40 -> 2 lanes / 24 pad bits). All satisfy the Pallas
+# kernel's Kp % bk == 0 contract with the default bk=min(8, Kp).
+THREE_WAY_SHAPES = [(128, 256, 128), (64, 512, 256), (32, 100, 48),
+                    (16, 250, 64), (8, 40, 24)]
+
+
+@pytest.mark.parametrize("m,k,n", THREE_WAY_SHAPES)
+def test_binary_matmul_three_way_parity(m, k, n):
+    """The three lowerings of sign(a) @ sign(w) — Pallas XNOR-popcount
+    (interpret), the XLA packed-popcount twin, and the +-1 int8 MXU twin
+    — are exact int32 equals, no tolerance: integer dots of +-1 vectors
+    have one right answer, which is what lets every caller switch impls
+    (ModelConfig.spec_draft_impl) without tokens moving."""
+    a, w = _data(m, k, n, seed=7)
+    pa, pw = pack_bits(a), pack_bits(w)
+    gold = kref.binary_matmul_packed_ref(pa, pw, k)
+    pallas = binary_matmul_pallas(pa, pw, k=k, interpret=True)
+    mxu = binary_matmul_int8(pack_signs_int8(a), pw, k=k)
+    assert gold.dtype == pallas.dtype == mxu.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(pallas))
+    np.testing.assert_array_equal(np.asarray(gold), np.asarray(mxu))
+
+
+def test_binary_matmul_pallas_rejects_misaligned_blocks():
+    """The 'callers pad' contract: K=384 packs to 12 uint32 lanes, and
+    the default bk=min(8, 12)=8 does not divide 12 — the kernel must
+    refuse (assert) rather than read out of bounds or silently drop
+    lanes."""
+    m, k, n = 64, 384, 64
+    a, w = _data(m, k, n, seed=8)
+    with pytest.raises(AssertionError):
+        binary_matmul_pallas(pack_bits(a), pack_bits(w), k=k,
+                             interpret=True)
 
 
 @pytest.mark.parametrize("m,k,n", SHAPES)

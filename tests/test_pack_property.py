@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the bit-packing primitives
+(core/binarize.py): the numerical heart of every binary lowering.
+
+Three properties, over random sign patterns, shapes, and — crucially —
+K values that are NOT multiples of the 32-bit lane width:
+
+  * pack -> unpack round-trips exactly: unpack_bits(pack_bits(x), K)
+    recovers sign(x) (with sign(0) := +1) for every K, including the
+    degenerate all-plus-one / all-minus-one columns;
+  * padding is invisible: the "callers pad" convention sets trailing
+    bits of the last lane to 1 (+1) in BOTH operands, so they cancel in
+    xor-popcount — binary_dot_packed must equal the float sign-matmul
+    oracle exactly for any trailing K, which is the convention
+    ``binary_matmul_pallas`` asserts but (before this file) nothing
+    exercised directly;
+  * the int8 twin agrees: pack_signs_int8 and unpack_bits produce the
+    same +-1 vectors, so the MXU lowering contracts the same integers.
+
+The profile is derandomized like test_prefix_property.py: CI runs the
+same example set every time — property coverage without flaky-lane
+roulette.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.binarize import (LANE_BITS, binary_dot_packed,  # noqa: E402
+                                 pack_bits, pack_signs_int8, packed_len,
+                                 unpack_bits)
+
+SET = dict(max_examples=60, deadline=None, derandomize=True)
+
+# K deliberately straddles lane boundaries: 1, 31, 32, 33, ... 100
+K_DIM = st.integers(min_value=1, max_value=100)
+ROWS = st.integers(min_value=1, max_value=8)
+
+
+def _signs(rows, k, seed, mode):
+    """Deterministic sign pattern; mode picks degenerate columns too."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, k)).astype(np.float32)
+    if mode == "all_plus":
+        x = np.abs(x)
+    elif mode == "all_minus":
+        x = -np.abs(x) - 1e-3          # strictly negative (sign(0) is +1)
+    elif mode == "zeros":
+        x[:, ::2] = 0.0                # exercise the sign(0) := +1 edge
+    return x
+
+
+MODES = st.sampled_from(["random", "all_plus", "all_minus", "zeros"])
+
+
+@settings(**SET)
+@given(rows=ROWS, k=K_DIM, seed=st.integers(0, 2**16), mode=MODES)
+def test_pack_unpack_roundtrip(rows, k, seed, mode):
+    x = _signs(rows, k, seed, mode)
+    p = pack_bits(jnp.asarray(x))
+    assert p.shape == (rows, packed_len(k))
+    assert p.dtype == jnp.uint32
+    got = np.asarray(unpack_bits(p, k, dtype=jnp.int8))
+    want = np.where(x >= 0, 1, -1).astype(np.int8)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SET)
+@given(k=K_DIM, seed=st.integers(0, 2**16))
+def test_padding_bits_are_all_ones(k, seed):
+    """The contract consumers rely on: every bit past K in the last lane
+    is 1, in every row — that is what makes pad bits cancel between two
+    packed operands."""
+    x = _signs(4, k, seed, "random")
+    p = np.asarray(pack_bits(jnp.asarray(x)))
+    n_pad = packed_len(k) * LANE_BITS - k
+    if n_pad == 0:
+        return
+    last = p[:, -1].astype(np.uint64)
+    pad_mask = ((np.uint64(1) << np.uint64(n_pad)) - np.uint64(1)) \
+        << np.uint64(LANE_BITS - n_pad)
+    np.testing.assert_array_equal(last & pad_mask,
+                                  np.full_like(last, pad_mask))
+
+
+@settings(**SET)
+@given(m=ROWS, n=ROWS, k=K_DIM, seed=st.integers(0, 2**16),
+       mode=MODES)
+def test_packed_dot_matches_float_oracle(m, n, k, seed, mode):
+    """dot = K - 2*popcount(xor) is exact for ANY K: the +1 padding bits
+    contribute 0 to the xor-popcount, so no correction term depends on
+    n_pad."""
+    a = _signs(m, k, seed, mode)
+    w = _signs(n, k, seed + 1, "random")
+    got = np.asarray(binary_dot_packed(pack_bits(jnp.asarray(a)),
+                                       pack_bits(jnp.asarray(w)), k))
+    sa = np.where(a >= 0, 1.0, -1.0)
+    sw = np.where(w >= 0, 1.0, -1.0)
+    want = (sa @ sw.T).astype(np.int32)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SET)
+@given(rows=ROWS, k=K_DIM, seed=st.integers(0, 2**16), mode=MODES)
+def test_int8_signs_agree_with_unpacked_bits(rows, k, seed, mode):
+    """pack_signs_int8 (the MXU activation path) and unpack_bits (the MXU
+    weight path) share the x >= 0 predicate bit for bit — the int8 twin's
+    exactness rests on this agreement."""
+    x = _signs(rows, k, seed, mode)
+    via_int8 = np.asarray(pack_signs_int8(jnp.asarray(x)))
+    via_bits = np.asarray(unpack_bits(pack_bits(jnp.asarray(x)), k,
+                                      dtype=jnp.int8))
+    np.testing.assert_array_equal(via_int8, via_bits)

@@ -136,8 +136,65 @@ def test_spec_headroom_validated():
 
 
 # ---------------------------------------------------------------------------
-# engine token-identity matrix: {bf16, int8} x {contiguous, paged} x
-# {greedy, seeded-sampling}, spec (k=3, binary draft) vs non-spec
+# fused draft wave == k sequential decodes (tokens AND cache state)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8],
+                         ids=["greedy", "sampled"])
+def test_draft_wave_matches_sequential_decodes(trained_lm, temperature):
+    """serving/spec.make_draft_wave is PR 5's k-dispatch draft loop fused
+    into one lax.scan launch. It must be a pure refactor: same proposed
+    tokens AND the same post-wave cache state (K/V inserts, lengths) as k
+    separate ``api.decode`` calls with host-side token picks between
+    them."""
+    from repro.serving.spec import make_draft_wave
+    cfg, api, params = trained_lm
+    draft = binarize_draft_params(params, cfg)
+    k, seed_key = 3, jax.random.PRNGKey(5)
+    toks = jnp.asarray([_markov(3, 8, cfg.vocab),
+                        _markov(5, 8, cfg.vocab)], jnp.int32)
+    rids = jnp.asarray([7, 2], jnp.int32)
+    base_steps = jnp.asarray([1, 4], jnp.int32)
+
+    logits, caches_f = api.prefill(params, {"tokens": toks}, max_len=32)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    wave = make_draft_wave(api, k=k, temperature=temperature,
+                           seed_key=seed_key)
+    toks_f, caches_f = jax.jit(wave)(draft, caches_f, first, rids,
+                                     base_steps)
+
+    # the unfused loop, exactly as ServeEngine._step_spec ran it in PR 5
+    _, caches_s = api.prefill(params, {"tokens": toks}, max_len=32)
+    seq = [first]
+    for j in range(k):
+        dl, caches_s = jax.jit(api.decode)(draft, caches_s, seq[-1])
+        if temperature <= 0:
+            nxt = jnp.argmax(dl, -1).astype(jnp.int32)
+        else:
+            def one(rid, step, row):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(seed_key, rid), step)
+                return jax.random.categorical(key, row / temperature)
+            nxt = jax.vmap(one)(rids, base_steps + j,
+                                dl).astype(jnp.int32)
+        seq.append(nxt[:, None])
+    toks_s = jnp.concatenate(seq, axis=1)
+
+    np.testing.assert_array_equal(np.asarray(toks_f), np.asarray(toks_s))
+    # cache-state equality: same K/V bits inserted at the same positions
+    # (the scan traces the identical decode computation per step)
+    flat_f, tree_f = jax.tree.flatten(caches_f)
+    flat_s, tree_s = jax.tree.flatten(caches_s)
+    assert tree_f == tree_s
+    for lf, ls in zip(flat_f, flat_s):
+        np.testing.assert_array_equal(
+            np.asarray(lf, np.float32), np.asarray(ls, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# engine token-identity matrix: {draft_impl} x {bf16, int8} x
+# {contiguous, paged} x {greedy, seeded-sampling}, spec (k=3, binary
+# draft) vs non-spec
 # ---------------------------------------------------------------------------
 
 def _outputs(api, params, prompts, *, temperature, max_new=10, **kw):
@@ -154,25 +211,50 @@ def spec_prompts(trained_lm):
     return [_markov(3 + i, 8 + (i % 3), cfg.vocab) for i in range(5)]
 
 
+@pytest.fixture(scope="module")
+def plain_outputs(trained_lm, spec_prompts):
+    """Memoized non-speculative baselines: one per (codec, pool,
+    temperature) cell, shared across the draft_impl axis (the baseline
+    has no draft, so the impl can't change it)."""
+    cfg, api, params = trained_lm
+    cache = {}
+
+    def get(codec, pool, temperature):
+        key = (codec, pool, temperature)
+        if key not in cache:
+            kw = dict(kv_cache=codec,
+                      kv_block_size=8 if pool == "paged" else 0)
+            cache[key] = _outputs(api, params, spec_prompts,
+                                  temperature=temperature, **kw)[0]
+        return cache[key]
+
+    return get
+
+
+@pytest.mark.parametrize("draft_impl", ["xla_xnor", "int8_mxu"])
 @pytest.mark.parametrize("temperature", [0.0, 0.8],
                          ids=["greedy", "sampled"])
 @pytest.mark.parametrize("pool", ["contiguous", "paged"])
 @pytest.mark.parametrize("codec", ["bf16", "int8"])
-def test_spec_token_identical_matrix(trained_lm, spec_prompts, codec, pool,
-                                     temperature):
+def test_spec_token_identical_matrix(trained_lm, spec_prompts,
+                                     plain_outputs, codec, pool,
+                                     temperature, draft_impl):
     cfg, api, params = trained_lm
     kw = dict(kv_cache=codec,
               kv_block_size=8 if pool == "paged" else 0)
-    want, _ = _outputs(api, params, spec_prompts,
-                       temperature=temperature, **kw)
+    want = plain_outputs(codec, pool, temperature)
     got, eng = _outputs(api, params, spec_prompts,
-                        temperature=temperature, spec_k=3, **kw)
+                        temperature=temperature, spec_k=3,
+                        spec_draft_impl=draft_impl, **kw)
     assert got == want
     # the draft must actually be doing something: acceptance > 0 and
     # fewer float passes than tokens-emitting ticks of the plain engine
     assert eng.acceptance_rate() > 0
     assert eng.stats["spec_waves"] == eng.stats["decode_steps"]
     assert eng.stats["spec_drafted"] > 0
+    # the fused draft scan costs exactly one launch per wave (PR 5: k)
+    assert (eng.stats["spec_draft_launches"]
+            == eng.stats["spec_waves"])
     assert (eng.stats["generated_tokens"]
             == sum(len(o) for o in got))
 
