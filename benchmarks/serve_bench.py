@@ -40,11 +40,27 @@ def bench_bucket(api, params, workload, *, max_batch, max_len):
     return results, toks, dt, None
 
 
-def bench_slot(api, params, workload, *, max_batch, max_len, **eng_kw):
+def bench_slot(api, params, workload, *, max_batch, max_len,
+               latency: dict | None = None, **eng_kw):
     eng = ServeEngine(api, params, max_batch=max_batch, max_len=max_len,
                       **eng_kw)
-    results, toks, dt = _drive(eng, workload)
+    results, toks, dt = _drive(eng, workload, latency)
     return results, toks, dt, eng
+
+
+def _pct_rows(prefix, latency):
+    """p50/p99 TTFT + inter-token-latency rows from a _drive latency dict."""
+    rows = []
+    for metric in ("ttft", "itl"):
+        xs = latency.get(metric) or []
+        if not xs:
+            continue
+        p50, p99 = np.percentile(xs, [50, 99])
+        rows.append((f"{prefix}_{metric}_p50", p50 * 1e6,
+                     f"{p50 * 1e3:.1f} ms"))
+        rows.append((f"{prefix}_{metric}_p99", p99 * 1e6,
+                     f"{p99 * 1e3:.1f} ms"))
+    return rows
 
 
 def run(quick: bool = True, *, requests: int | None = None,
@@ -61,8 +77,10 @@ def run(quick: bool = True, *, requests: int | None = None,
 
     _, btoks, bdt, _ = bench_bucket(api, params, workload,
                                     max_batch=max_batch, max_len=max_len)
+    lat = {}
     _, stoks, sdt, eng = bench_slot(api, params, workload,
-                                    max_batch=max_batch, max_len=max_len)
+                                    max_batch=max_batch, max_len=max_len,
+                                    latency=lat)
     assert btoks == stoks, (btoks, stoks)
     rows = [
         ("serve/bucket_tok_s", bdt / btoks * 1e6, f"{btoks / bdt:.1f} tok/s"),
@@ -76,7 +94,94 @@ def run(quick: bool = True, *, requests: int | None = None,
         ("serve/slot_kv_bytes", 0.0,
          f"{eng.stats['kv_bytes'] / 1024:.1f} KiB resident"),
     ]
+    rows += _pct_rows("serve/slot", lat)
+    rows += _mesh_rows(quick, requests=requests, max_batch=max_batch,
+                       rate=rate, seed=seed)
     return rows
+
+
+_MESH_SCRIPT = """
+import json, sys, time
+import jax
+import numpy as np
+from benchmarks import serve_bench
+from repro.configs import smoke_config
+from repro.models import get_model
+from repro.launch.mesh import make_mesh
+from repro.serving.scheduler import poisson_workload
+
+requests, max_batch, rate, seed, n = json.loads(sys.argv[1])
+# f32 compute: random-init bf16 argmax gaps (~1e-3) sit below sharded-
+# matmul reduction-reorder noise, and the point of the identity assert is
+# the engine, not tie-breaking luck (tests/test_engine_parity.py holds the
+# trained-model token bar)
+cfg = smoke_config("stablelm-3b").replace(compute_dtype="float32")
+api = get_model(cfg)
+params = api.init(jax.random.PRNGKey(0))
+workload = poisson_workload(requests, rate=rate,
+                            prompt_lens=(5, 8, 12, 16), max_new=(4, 16),
+                            vocab=cfg.vocab, seed=seed)
+warmup = poisson_workload(max(4, max_batch), rate=rate,
+                          prompt_lens=(5, 8, 12, 16), max_new=(4, 16),
+                          vocab=cfg.vocab, seed=seed + 10 ** 6)
+rows = []
+ref = None
+for name, mesh in (("1dev", None),
+                   (f"mesh{n}", make_mesh((n,), ("model",)))):
+    from repro.serving import ServeEngine
+    eng = ServeEngine(api, params, max_batch=max_batch, max_len=64,
+                      mesh=mesh)
+    # compile every prefill bucket + the decode step outside the timed
+    # drive: GSPMD partitioning makes the mesh engine's compiles much
+    # slower, and compile time is not what this row prices
+    serve_bench._drive(eng, warmup)
+    lat = {}
+    res, toks, dt = serve_bench._drive(eng, workload, lat)
+    if ref is None:
+        ref = res
+    else:
+        assert list(res.values()) == list(ref.values()), \\
+            "mesh outputs diverged from single-device"
+    rows.append((f"serve/{name}_tok_s", dt / toks * 1e6,
+                 f"{toks / dt:.1f} tok/s"))
+    rows += serve_bench._pct_rows(f"serve/{name}", lat)
+    rows.append((f"serve/{name}_kv_bytes_per_dev", 0.0,
+                 f"{eng.stats['kv_bytes_per_device'] / 1024:.1f} KiB"))
+print("RESULT:" + json.dumps(rows))
+"""
+
+
+def _mesh_rows(quick: bool = True, *, requests, max_batch, rate, seed,
+               mesh: int = 2):
+    """Tensor-parallel slot engine vs single-device, same workload, in a
+    subprocess that forces ``mesh`` virtual host devices (the parent
+    process already initialized jax with one). Token identity is asserted
+    inside the subprocess; wall-clock is recorded honestly — on a
+    single-core CPU host the mesh row prices the collectives (virtual
+    devices serialize), while on real multi-chip hosts the identical code
+    path is where the speedup comes from."""
+    import json
+    import subprocess
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root])
+    prelude = ("import os\n"
+               "os.environ['XLA_FLAGS'] = "
+               f"'--xla_force_host_platform_device_count={mesh}'\n")
+    arg = json.dumps([requests, max_batch, rate, seed, mesh])
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", prelude + _MESH_SCRIPT, arg], env=env,
+            capture_output=True, text=True, timeout=1800, check=True)
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("RESULT:")][-1]
+        return [tuple(r) for r in json.loads(line[len("RESULT:"):])]
+    except (subprocess.SubprocessError, IndexError) as e:  # noqa: BLE001
+        err = getattr(e, "stderr", "") or str(e)
+        return [("serve/mesh_ERROR", 0.0, repr(err[-200:]))]
 
 
 def _trained_smoke_lm(steps: int = 200):
@@ -105,21 +210,56 @@ def _trained_smoke_lm(steps: int = 200):
     return cfg, api, params
 
 
-def _drive(eng, workload):
+def _drive(eng, workload, latency: dict | None = None):
     """Feed a workload into an existing engine (arrival clock = decode
-    steps) and time it; returns (results for these rids, tokens, dt)."""
+    steps) and time it; returns (results for these rids, tokens, dt).
+
+    ``latency``, when given, is filled with two lists of seconds:
+    ``ttft`` (per request, arrival -> first generated token) and ``itl``
+    (every subsequent inter-token gap; a speculative wave that lands k
+    tokens in one step contributes k gaps of step_time/k). Throughput
+    alone hides scheduling pathologies — a bucket engine can post decent
+    tok/s while late arrivals starve behind a draining group — so the
+    percentile columns ride next to tok/s in every serve row."""
     pending = sorted(workload, key=lambda w: w[0])
     base = eng.step_count
     rids = []
+    arrive, counts, last_t = {}, {}, {}
+    ttft, itl = [], []
     t0 = time.time()
     while pending or eng.queue or any(s is not None for s in eng.slots):
+        now = time.time()
         while pending and pending[0][0] <= eng.step_count - base:
             _, prompt, max_new = pending.pop(0)
-            rids.append(eng.add_request(prompt, max_new=max_new))
-        if not eng.step() and pending:
+            rid = eng.add_request(prompt, max_new=max_new)
+            rids.append(rid)
+            arrive[rid], counts[rid] = now, 0
+        stepped = eng.step()
+        if latency is not None:
+            now = time.time()
+            emitted = {s.rid: len(s.out) for s in eng.slots
+                       if s is not None and s.rid in counts}
+            for rid, out in eng.results.items():
+                if rid in counts:
+                    emitted[rid] = len(out)
+            for rid, n in emitted.items():
+                prev = counts[rid]
+                if n <= prev:
+                    continue
+                fresh = n - prev
+                if prev == 0:
+                    ttft.append(now - arrive[rid])
+                    fresh -= 1
+                    last_t[rid] = now
+                if fresh:
+                    itl.extend([(now - last_t[rid]) / fresh] * fresh)
+                last_t[rid], counts[rid] = now, n
+        if not stepped and pending:
             eng.step_count = max(eng.step_count + 1,
                                  base + pending[0][0])
     dt = time.time() - t0
+    if latency is not None:
+        latency["ttft"], latency["itl"] = ttft, itl
     results = {r: eng.results[r] for r in rids}
     return results, sum(len(v) for v in results.values()), dt
 

@@ -145,6 +145,14 @@ def set_logical_rules(mesh, mesh_rules: MeshRules):
     _ACTIVE_RULES, _ACTIVE_MESH = mesh_rules, mesh
 
 
+def get_logical_rules():
+    """(mesh, rules) currently active — callers that activate rules for a
+    scoped region (the serving engines flip them around every jitted call
+    so mesh and plain engines coexist in one process) save this and restore
+    it afterwards via set_logical_rules(*saved)."""
+    return _ACTIVE_MESH, _ACTIVE_RULES
+
+
 def active_mesh():
     """The mesh activated by set_logical_rules, or None (single-device
     tests). Policy code (e.g. attention.resolve_cache_update) keys off

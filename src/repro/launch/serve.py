@@ -3,6 +3,12 @@ through the continuous-batching slot engine (or the legacy bucket engine).
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
       --requests 8 --prompt-lens 8,12,16 --max-new 16
+
+Tensor-parallel serving (N-way "model" mesh; on CPU force N host devices):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
+      --requests 8 --mesh 2 --prefill-chunk 16
 """
 
 from __future__ import annotations
@@ -70,6 +76,18 @@ def main(argv=None):
                          "even with --spec-decode set")
     ap.add_argument("--seed", type=int, default=0,
                     help="engine sampling seed (temperature > 0)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="tensor-parallel serving over an N-way 'model' "
+                         "mesh: attention heads + MLP hidden + the KV "
+                         "pool's head axis shard across N devices (0 = "
+                         "single device). Needs N visible devices — on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="C",
+                    help="blockwise prefill: scan C-token chunks through "
+                         "the verify path so long-context prefill holds "
+                         "O(batch*C) activations (0 = monolithic; power "
+                         "of two; slot engine, GQA archs only)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -95,6 +113,15 @@ def main(argv=None):
         cls = BucketEngine
     stop = frozenset(int(x) for x in args.stop_tokens.split(",") if x)
     spec_k = args.spec_decode if args.draft != "none" else 0
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        if jax.device_count() < args.mesh:
+            ap.error(f"--mesh {args.mesh} needs {args.mesh} devices but "
+                     f"only {jax.device_count()} are visible (on CPU set "
+                     "XLA_FLAGS=--xla_force_host_platform_device_count="
+                     f"{args.mesh})")
+        mesh = make_mesh((args.mesh,), ("model",))
     if cls is ServeEngine:
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
@@ -102,14 +129,17 @@ def main(argv=None):
                   kv_block_size=args.kv_block_size,
                   prefix_cache=args.prefix_cache,
                   spec_k=spec_k, spec_draft="binary",
-                  spec_draft_impl=args.spec_draft_impl)
+                  spec_draft_impl=args.spec_draft_impl, mesh=mesh,
+                  prefill_chunk=args.prefill_chunk)
     else:
-        if args.kv_block_size or args.prefix_cache or stop or spec_k:
+        if args.kv_block_size or args.prefix_cache or stop or spec_k \
+                or args.prefill_chunk:
             ap.error("--kv-block-size/--prefix-cache/--stop-tokens/"
-                     "--spec-decode need the slot engine")
+                     "--spec-decode/--prefill-chunk need the slot engine")
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
-                  attn_impl=args.attn_impl, kv_cache=args.kv_cache)
+                  attn_impl=args.attn_impl, kv_cache=args.kv_cache,
+                  mesh=mesh)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.choice(plens))

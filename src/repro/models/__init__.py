@@ -43,6 +43,11 @@ class ModelApi(NamedTuple):
     # None for families without a multi-token GQA decode form (MLA's
     # absorbed decode, SSM state, whisper's cross caches).
     verify: Callable | None = None
+    # blockwise prefill for long contexts: prefill_chunked(params, batch,
+    # max_len=, seq_lens=, chunk=) scans token chunks through the verify
+    # path so live activations are O(B * chunk), not O(B * S). Same
+    # (logits, caches) contract as prefill; GQA families only.
+    prefill_chunked: Callable | None = None
 
     def init_deployed(self, key):
         """Deploy-time params: binary latents -> packed/int8 weights."""
@@ -90,6 +95,10 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             # GQA families only: MLA's absorbed decode is single-token
             verify=((lambda p, c, tok: t.lm_verify(p, cfg, c, tok))
                     if not cfg.use_mla else None),
+            prefill_chunked=(
+                (lambda p, b, **kw: t.lm_prefill_chunked(p, cfg,
+                                                         b["tokens"], **kw))
+                if not cfg.use_mla else None),
         )
     if cfg.family == "vlm":
         from repro.models import llama_vision as v

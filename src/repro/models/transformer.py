@@ -140,6 +140,60 @@ def lm_prefill(params, cfg: ModelConfig, tokens, *, max_len=None,
     return logits[:, 0], caches
 
 
+def lm_prefill_chunked(params, cfg: ModelConfig, tokens, *, max_len=None,
+                       seq_lens=None, chunk: int = 64):
+    """Blockwise-parallel prefill: scan over token chunks instead of one
+    full-sequence attention (the chunked q/k structure of the blockwise-
+    parallel-transformer exemplar, mapped onto our online-softmax kernels).
+
+    Each chunk runs through the multi-token verify path: its K/V append at
+    cache positions len..len+c-1 and its queries attend causally to
+    everything already cached via the fused blockwise decode
+    (kvcache._fused_quant_decode) — so live activation memory is bounded by
+    O(B * chunk) score tiles + the cache, not O(B * S), and long contexts
+    prefill without a quadratic-in-S working set. Hidden states (B, S, d)
+    are collected across chunks and the head runs once on the gathered
+    last-token rows, so the logits contract matches lm_prefill exactly.
+
+    GQA families only (the verify path is GQA); ``chunk`` must divide the
+    padded length S, which the serving engines' power-of-two buckets
+    guarantee for power-of-two chunks. Not bit-identical to lm_prefill
+    (blockwise softmax reorders the reduction) but token-identical on a
+    trained model — tests/test_engine_parity.py carries the cell.
+    """
+    if cfg.use_mla:
+        raise ValueError("chunked prefill requires GQA blocks (the verify "
+                         "path); MLA's absorbed cache decodes one token at "
+                         "a time")
+    b, s = tokens.shape
+    max_len = max_len or s
+    c = min(int(chunk), s)
+    if c < 1 or s % c:
+        raise ValueError(f"chunk ({chunk}) must divide the padded prefill "
+                         f"length ({s})")
+    caches = lc.init_segment_caches(cfg, b, max_len, dtype=lc.cdt(cfg))
+    tok_c = tokens.reshape(b, s // c, c).swapaxes(0, 1)      # (nc, B, c)
+
+    def one(caches, toks_i):
+        # segments_verify derives absolute positions from cache['len'],
+        # which advances by c per chunk — RoPE and causal masking line up
+        # with the monolithic prefill by construction
+        x = _embed(params, cfg, toks_i)
+        h, caches = lc.segments_verify(params["blocks"], x, cfg, caches)
+        return caches, h
+
+    caches, hs = jax.lax.scan(one, caches, tok_c)
+    h = hs.swapaxes(0, 1).reshape(b, s, -1)                  # (B, S, d)
+    if seq_lens is None:
+        h_last = h[:, -1:, :]
+    else:
+        seq_lens = jnp.asarray(seq_lens, jnp.int32)
+        h_last = h[jnp.arange(b), seq_lens - 1][:, None, :]
+        caches = lc.set_cache_lengths(caches, seq_lens)
+    logits = _logits(params, cfg, h_last)
+    return logits[:, 0], caches
+
+
 def lm_prefill_ctx(params, cfg: ModelConfig, tokens, ctx, ctx_lens, *,
                    max_len, seq_lens):
     """Suffix prefill continuing a cached prefix (the radix prefix cache).

@@ -29,7 +29,7 @@ class BucketEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
                  attn_impl: str | None = None, kv_cache: str | None = None,
-                 spec_draft_impl: str | None = None):
+                 spec_draft_impl: str | None = None, mesh=None):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
@@ -42,6 +42,15 @@ class BucketEngine:
         if overrides:
             from repro.models import get_model
             api = get_model(api.cfg.replace(**overrides))
+        # tensor-parallel baseline: same param sharding + scoped-rules
+        # pattern as ServeEngine, so bucket-vs-slot benchmarks compare
+        # engines, not device placement
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.launch import specs as _specs
+            self._mesh_rules = _specs.mesh_rules_for(api.cfg, mesh)
+            _, p_sh = _specs.param_shardings(api, mesh, self._mesh_rules)
+            params = jax.device_put(params, p_sh)
         self.api, self.params = api, params
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature
@@ -49,9 +58,28 @@ class BucketEngine:
         self._next_rid = 0
         self.queue: list[Request] = []
         self.results: dict[int, list[int]] = {}
-        self._decode = jax.jit(api.decode)
-        self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, b, max_len=max_len))
+        self._decode = self._meshed(jax.jit(api.decode))
+        self._prefill = self._meshed(jax.jit(
+            lambda p, b: api.prefill(p, b, max_len=max_len)))
+
+    def _meshed(self, fn):
+        """Scoped mesh activation around jitted calls (see
+        ServeEngine._meshed for why the rules flip per call)."""
+        if self.mesh is None:
+            return fn
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import set_mesh
+        mesh, rules = self.mesh, self._mesh_rules
+
+        def call(*args):
+            prev = shd.get_logical_rules()
+            shd.set_logical_rules(mesh, rules)
+            try:
+                with set_mesh(mesh):
+                    return fn(*args)
+            finally:
+                shd.set_logical_rules(*prev)
+        return call
 
     def add_request(self, prompt, max_new: int = 16) -> int:
         prompt = np.asarray(prompt, np.int32)

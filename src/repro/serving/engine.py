@@ -91,7 +91,8 @@ class ServeEngine:
                  kv_cache: str | None = None, kv_block_size: int = 0,
                  prefix_cache: bool = False, n_blocks: int | None = None,
                  spec_k: int = 0, spec_draft: str = "binary",
-                 spec_draft_impl: str | None = None):
+                 spec_draft_impl: str | None = None, mesh=None,
+                 prefill_chunk: int = 0):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
@@ -133,6 +134,29 @@ class ServeEngine:
             raise ValueError(
                 f"model {api.cfg.name!r} has no paged cache layout "
                 "(MLA/SSM caches are not paged); use kv_block_size=0")
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk < 0 or (
+                self.prefill_chunk and
+                self.prefill_chunk & (self.prefill_chunk - 1)):
+            raise ValueError(
+                f"prefill_chunk must be 0 or a power of two (buckets are "
+                f"powers of two), got {prefill_chunk}")
+        if self.prefill_chunk and api.prefill_chunked is None:
+            raise ValueError(
+                f"model {api.cfg.name!r} has no chunked prefill (GQA "
+                "families only); use prefill_chunk=0")
+        # -- tensor-parallel serving: a `model`-axis mesh shards attention
+        # heads + MLP hidden (the param logical-axis rules) and the KV
+        # pool's head axis (cache_partition_specs), so per-device cache
+        # residency shrinks ~1/model and decode matmuls split across
+        # devices. Rules activate only around this engine's jitted calls
+        # (see _meshed), so mesh and plain engines coexist in-process.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.launch import specs as _specs
+            self._mesh_rules = _specs.mesh_rules_for(api.cfg, mesh)
+            _, p_sh = _specs.param_shardings(api, mesh, self._mesh_rules)
+            params = jax.device_put(params, p_sh)
         self.api, self.params = api, params
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature
@@ -168,6 +192,20 @@ class ServeEngine:
         else:
             self.pool_len = max_len
             self.caches = api.init_cache(max_batch, max_len)
+        if mesh is not None:
+            # the pool itself and every transient prefill cache carry
+            # NamedShardings with the head axis on "model": device_put here,
+            # out_shardings on every jit that returns a pool below — cache
+            # blocks never gather to one device between the two
+            self._cache_sh = kvc.cache_shardings(self.caches, mesh,
+                                                 self._mesh_rules)
+            self.caches = jax.device_put(self.caches, self._cache_sh)
+            self._prefill_sh = kvc.cache_shardings(
+                jax.eval_shape(
+                    lambda: api.init_cache(max_batch, self.pool_len)),
+                mesh, self._mesh_rules)
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._repl = NamedSharding(mesh, PartitionSpec())
         # public virtual clock (decode steps elapsed): callers scheduling
         # arrivals by step may also fast-forward it across idle gaps, as
         # benchmarks/serve_bench.py does
@@ -189,30 +227,56 @@ class ServeEngine:
                       # fused draft scan (PR 5 spent k per wave) — the
                       # dispatch-count reduction benchmarks assert on
                       "spec_draft_launches": 0,
-                      "kv_bytes": kv_pool_bytes(self.caches)}
+                      "kv_bytes": kv_pool_bytes(self.caches),
+                      # per-device shard of the pool: == kv_bytes on one
+                      # device, ~kv_bytes/model on a model-axis mesh
+                      "kv_bytes_per_device":
+                          kvc.kv_pool_bytes_per_device(self.caches)}
+
+        def outs(*sh):
+            # pin pool-returning jits' output shardings under a mesh so the
+            # persistent pool provably stays sharded through every donated
+            # update; {} when no mesh (the exact historical jits)
+            if mesh is None:
+                return {}
+            return {"out_shardings": sh[0] if len(sh) == 1 else sh}
+
         # the pool cache is donated: step/admit immediately rebind
         # self.caches, so XLA can update the (layers, B, T, ...) buffers in
         # place instead of copying the whole pool every tick
-        self._decode = jax.jit(api.decode, donate_argnums=1)
-        self._prefill = jax.jit(
-            lambda p, toks, sl: api.prefill(p, {"tokens": toks},
-                                            max_len=self.pool_len,
-                                            seq_lens=sl))
+        self._decode = self._meshed(jax.jit(
+            api.decode, donate_argnums=1,
+            **outs(self._repl, self._cache_sh) if mesh is not None
+            else {}))
+        prefill_fn = api.prefill_chunked if self.prefill_chunk else \
+            api.prefill
+        prefill_kw = ({"chunk": self.prefill_chunk} if self.prefill_chunk
+                      else {})
+        self._prefill = self._meshed(jax.jit(
+            lambda p, toks, sl: prefill_fn(p, {"tokens": toks},
+                                           max_len=self.pool_len,
+                                           seq_lens=sl, **prefill_kw),
+            **outs(self._repl, self._prefill_sh) if mesh is not None
+            else {}))
         if self.paged:
-            self._insert_pages = jax.jit(kvc.paged_insert_prefill,
-                                         donate_argnums=0)
-            self._update_slots = jax.jit(kvc.paged_update_slots,
-                                         donate_argnums=0)
+            self._insert_pages = self._meshed(jax.jit(
+                kvc.paged_insert_prefill, donate_argnums=0,
+                **outs(self._cache_sh) if mesh is not None else {}))
+            self._update_slots = self._meshed(jax.jit(
+                kvc.paged_update_slots, donate_argnums=0,
+                **outs(self._cache_sh) if mesh is not None else {}))
             codec, hd = self._codec, api.cfg.kv_head_dim()
-            self._gather_ctx = jax.jit(
+            self._gather_ctx = self._meshed(jax.jit(
                 lambda caches, pages: kvc.gather_prefix_context(
-                    caches, pages, codec, hd))
-            self._prefill_ctx = jax.jit(
+                    caches, pages, codec, hd)))
+            self._prefill_ctx = self._meshed(jax.jit(
                 lambda p, toks, sl, ctx, cl: api.prefill_ctx(
                     p, {"tokens": toks}, ctx, cl, max_len=self.pool_len,
-                    seq_lens=sl))
+                    seq_lens=sl)))
         else:
-            self._insert = jax.jit(api.cache_insert, donate_argnums=0)
+            self._insert = self._meshed(jax.jit(
+                api.cache_insert, donate_argnums=0,
+                **outs(self._cache_sh) if mesh is not None else {}))
         seed_key = self._seed_key
 
         def sample_rows(rids, steps, logits, t):
@@ -234,18 +298,57 @@ class ServeEngine:
             # the draft aliases every non-FFN target array; only the
             # packed sign bits + absmean scales are new residency
             self.draft_params = binarize_draft_params(params, api.cfg)
+            if mesh is not None:
+                # aliased float leaves already landed sharded via the
+                # device_put above; the packed sign-bit + scale leaves are
+                # tiny and new, so replicate anything not yet on the mesh
+                from jax.sharding import NamedSharding as _NS
+                self.draft_params = jax.tree.map(
+                    lambda x: x if isinstance(getattr(x, "sharding", None),
+                                              _NS)
+                    else jax.device_put(x, self._repl),
+                    self.draft_params)
             # the whole wave — k scanned draft decodes, rewind, float
             # verify, candidate selection — is ONE jitted launch (PR 5
             # dispatched each draft step separately with a host sample
             # round-trip in between: 2k+3 dispatches per wave, and the
             # dispatch overhead is what kept hybrid at 0.4x wall-clock)
-            self._spec_wave = jax.jit(
+            self._spec_wave = self._meshed(jax.jit(
                 make_spec_wave(api, k=self.spec_k,
                                temperature=float(temperature),
                                seed_key=self._seed_key),
-                donate_argnums=2)
-            self._set_lens = jax.jit(kvc.set_cache_lengths,
-                                     donate_argnums=0)
+                donate_argnums=2,
+                **outs(self._repl, self._repl, self._cache_sh)
+                if mesh is not None else {}))
+            self._set_lens = self._meshed(jax.jit(
+                kvc.set_cache_lengths, donate_argnums=0,
+                **outs(self._cache_sh) if mesh is not None else {}))
+
+    def _meshed(self, fn):
+        """Run ``fn`` with this engine's mesh + logical rules active.
+
+        Rules are process-global (with_logical_constraint and the
+        cache-update "auto" policy read them at trace time), so they are
+        flipped on only for the duration of each jitted call and restored
+        afterwards — a mesh engine and a plain engine can interleave steps
+        in one process without trampling each other's lowering decisions.
+        No-op without a mesh.
+        """
+        if self.mesh is None:
+            return fn
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import set_mesh
+        mesh, rules = self.mesh, self._mesh_rules
+
+        def call(*args):
+            prev = shd.get_logical_rules()
+            shd.set_logical_rules(mesh, rules)
+            try:
+                with set_mesh(mesh):
+                    return fn(*args)
+            finally:
+                shd.set_logical_rules(*prev)
+        return call
 
     def add_request(self, prompt, max_new: int = 16,
                     stop_tokens=()) -> int:

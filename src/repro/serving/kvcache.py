@@ -100,6 +100,88 @@ def kv_pool_bytes(caches) -> int:
     return total
 
 
+def kv_pool_bytes_per_device(caches) -> int:
+    """Resident cache bytes *per device*: the shard each device actually
+    holds, summed over the same leaves as kv_pool_bytes. Equal to
+    kv_pool_bytes on a single device; with the head axis sharded over a
+    ``model``-axis mesh it shrinks ~1/model — the number the mesh serving
+    tests assert on."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        key = getattr(path[-1], "key", None)
+        if key in ("len", "table"):
+            continue
+        shape = leaf.shape
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and hasattr(sh, "shard_shape"):
+            shape = sh.shard_shape(shape)
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# cache shardings: the codec seam speaks NamedShardings
+#
+# Every codec's layout obeys one naming convention, which is what makes the
+# sharding story name-driven instead of shape-driven:
+#
+#   values leaves  k, v, ek, ev, k_q, v_q, k_p, v_p   head axis at dim -2,
+#                                                     time axis at dim -3
+#   scale leaves   k_s, v_s                           head axis at dim -1,
+#                                                     time axis at dim -2
+#   index leaves   len, table                         replicated (host-
+#                                                     driven scatters)
+#
+# and any leading dims (the per-segment layer stack, the slot batch or the
+# physical-block axis of a paged pool) are unsharded. MLA's compressed
+# ``c``/``kr`` leaves have no head axis and stay replicated. The same spec
+# therefore covers the contiguous pool (count, B, T, H, D), the paged pool
+# (count, n_blocks, block, H, D) and prefill outputs (count, G, T, H, D):
+# cache blocks never gather to one device on their way between them.
+# ---------------------------------------------------------------------------
+
+_KV_VALUE_LEAVES = frozenset(
+    ["k", "v", "ek", "ev", "k_q", "v_q", "k_p", "v_p"])
+_KV_SCALE_LEAVES = frozenset(["k_s", "v_s"])
+
+
+def cache_partition_specs(caches, mesh, mesh_rules):
+    """PartitionSpec pytree for an engine cache pool (either layout, any
+    codec). ``mesh`` only needs ``axis_names`` (tests pass a stand-in);
+    ``mesh_rules`` is a distributed.sharding.MeshRules — build it with
+    launch.specs.mesh_rules_for so head-count divisibility fallbacks
+    apply."""
+    from jax.sharding import PartitionSpec as P
+
+    head = mesh_rules.mesh_axes("cache_heads", mesh.axis_names)
+    seq = mesh_rules.mesh_axes("cache_seq", mesh.axis_names)
+
+    def spec_for(path, leaf):
+        name = getattr(path[-1], "key", None)
+        if name in _KV_VALUE_LEAVES:
+            return P(*([None] * (leaf.ndim - 3)), seq, head, None)
+        if name in _KV_SCALE_LEAVES:
+            return P(*([None] * (leaf.ndim - 2)), seq, head)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(path, leaf) for path, leaf in flat])
+
+
+def cache_shardings(caches, mesh, mesh_rules):
+    """NamedSharding pytree for device_put / jit out_shardings of a cache
+    pool. ``caches`` may be concrete arrays or ShapeDtypeStructs (only leaf
+    names and ranks are read)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    specs = cache_partition_specs(caches, mesh, mesh_rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def _pad_time(a, max_len):
     """Pad (B, S, ...) to (B, max_len, ...) along axis 1 (zeros: a zero
     scale dequantizes to exactly 0, so pad rows stay inert even before

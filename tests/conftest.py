@@ -9,6 +9,57 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def run_forced_devices():
+    """Run a test snippet in a subprocess with N forced host devices.
+
+    The fast lane above pops XLA_FLAGS so in-process tests see exactly one
+    device; multi-device coverage (mesh sharding, tensor-parallel serving)
+    therefore runs in a child process that sets
+    ``--xla_force_host_platform_device_count=N`` *before* importing jax.
+    This fixture owns that boilerplate: it prepends the XLA_FLAGS prelude,
+    strips the parent's XLA_FLAGS, wires PYTHONPATH, and parses the
+    ``RESULT:<json>`` line the snippet prints.
+
+        def test_x(run_forced_devices):
+            out = run_forced_devices(SCRIPT, n_devices=4)
+            assert out["ok"]
+
+    ``root_on_path=True`` additionally exposes the repo root (so snippets
+    can ``import benchmarks.serve_bench``); ``env`` merges extra vars.
+    """
+    import json
+    import subprocess
+    import textwrap
+
+    def run(script, n_devices=2, *, env=None, timeout=900,
+            root_on_path=False):
+        e = dict(os.environ)
+        e.pop("XLA_FLAGS", None)
+        paths = [os.path.join(_ROOT, "src")]
+        if root_on_path:
+            paths.append(_ROOT)
+        e["PYTHONPATH"] = os.pathsep.join(paths)
+        if env:
+            e.update(env)
+        prelude = (
+            "import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={int(n_devices)}'\n")
+        proc = subprocess.run(
+            [sys.executable, "-c", prelude + textwrap.dedent(script)],
+            env=e, capture_output=True, text=True, timeout=timeout)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        lines = [ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("RESULT:")]
+        assert lines, f"no RESULT line in stdout:\n{proc.stdout[-2000:]}"
+        return json.loads(lines[-1][len("RESULT:"):])
+
+    return run
+
 
 @pytest.fixture(scope="session")
 def trained_lm():

@@ -1,0 +1,105 @@
+"""KV-pool sharding specs: the name-driven cache_partition_specs seam.
+
+Tensor-parallel serving hinges on one invariant: on a model>1 mesh, every
+*value-bearing* cache leaf (raw K/V, int8 q+scales, binary packed bits)
+carries "model" on its head axis, while the bookkeeping leaves (lengths,
+page tables) and MLA's compressed latents stay replicated. These tests pin
+that mapping in-process — cache_partition_specs only reads leaf names +
+ndim and mesh.axis_names, so a stand-in mesh suffices and no forced
+multi-device subprocess is needed. Placement/byte assertions live in
+tests/test_engine_parity.py::test_mesh_engine_parity.
+"""
+
+import collections
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import smoke_config
+from repro.launch import specs as S
+from repro.models import get_model
+from repro.serving import kvcache as kvc
+
+FakeMesh = collections.namedtuple("FakeMesh", ["axis_names", "shape"])
+
+MESH2 = FakeMesh(("model",), {"model": 2})
+
+
+def _leaf_specs(caches, mesh, rules):
+    specs = kvc.cache_partition_specs(caches, mesh, rules)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    return {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path): spec for path, spec in flat}
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8", "binary"])
+@pytest.mark.parametrize("pool", ["contiguous", "paged"])
+def test_value_leaves_sharded_on_model(codec, pool):
+    cfg = smoke_config("stablelm-3b").replace(kv_cache=codec)
+    api = get_model(cfg)
+    rules = S.mesh_rules_for(cfg, MESH2)
+    if pool == "paged":
+        caches = jax.eval_shape(lambda: api.init_paged_cache(16, 8, 2, 8))
+    else:
+        caches = jax.eval_shape(lambda: api.init_cache(2, 64))
+    specs = _leaf_specs(caches, MESH2, rules)
+    assert specs, "no cache leaves"
+    for name, spec in specs.items():
+        leaf = name.rsplit("/", 1)[-1]
+        if leaf in kvc._KV_VALUE_LEAVES:
+            # head axis (dim -2) sharded, time axis left whole
+            assert spec[-2] == "model", (name, spec)
+            assert spec[-1] is None, (name, spec)
+        elif leaf in kvc._KV_SCALE_LEAVES:
+            assert spec[-1] == "model", (name, spec)
+        else:
+            # len / block-table bookkeeping: replicated host-adjacent state
+            assert spec == P(), (name, spec)
+    # the invariant the mesh engine relies on: with model>1 the bulk of
+    # the pool is never fully replicated
+    assert any("model" in tuple(s) for s in specs.values())
+
+
+def test_non_divisible_heads_fall_back_to_replicated():
+    # qwen3-8b smoke has 2 KV heads: a 4-way model axis cannot split them,
+    # so mesh_rules_for drops cache_heads and every leaf replicates — the
+    # documented widest-divisible fallback, not an error
+    cfg = smoke_config("qwen3-8b")
+    api = get_model(cfg)
+    mesh4 = FakeMesh(("model",), {"model": 4})
+    rules = S.mesh_rules_for(cfg, mesh4)
+    caches = jax.eval_shape(lambda: api.init_cache(2, 64))
+    specs = _leaf_specs(caches, mesh4, rules)
+    assert all(all(e is None for e in tuple(s)) or s == P()
+               for s in specs.values()), specs
+
+
+def test_mla_latents_replicate():
+    # MLA's compressed c/kr latents have no head axis to shard; the spec
+    # builder must leave them alone rather than guess
+    cfg = smoke_config("deepseek-v3-671b")
+    assert cfg.use_mla
+    api = get_model(cfg)
+    rules = S.mesh_rules_for(cfg, MESH2)
+    caches = jax.eval_shape(lambda: api.init_cache(2, 64))
+    specs = _leaf_specs(caches, MESH2, rules)
+    assert specs
+    assert all(s == P() for s in specs.values()), specs
+
+
+def test_prefill_output_layout_covered():
+    # transient prefill caches carry an extra leading dim (layer stack x
+    # batch x time x heads x dh); the same name-driven rule must place
+    # "model" on the head axis there too, since the engine pins prefill
+    # out_shardings with it
+    cfg = smoke_config("stablelm-3b")
+    api = get_model(cfg)
+    rules = S.mesh_rules_for(cfg, MESH2)
+    caches = jax.eval_shape(lambda: api.init_cache(4, 128))
+    for name, spec in _leaf_specs(caches, MESH2, rules).items():
+        leaf = name.rsplit("/", 1)[-1]
+        if leaf in kvc._KV_VALUE_LEAVES:
+            assert len(tuple(spec)) >= 4 and spec[-2] == "model", (name,
+                                                                   spec)

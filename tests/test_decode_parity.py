@@ -19,7 +19,15 @@ B, S = 2, 32
 def test_prefill_decode_matches_forward(arch):
     cfg = smoke_config(arch)
     if cfg.family == "moe":
-        cfg = cfg.replace(capacity_factor=16.0)
+        # High capacity so token dropping cannot differ between the two
+        # paths, and float32 compute so top-k routing is deterministic:
+        # under bf16 the MLA-absorption decode path perturbs router
+        # scores by ~1e-3 while random-init sigmoid margins run ~3e-3 —
+        # a near-tie flip (deepseek-v3 seed, batch row 0) selects a
+        # different expert pair and produces an O(1) logit jump that no
+        # elementwise tolerance can absorb. f32 shrinks the path noise
+        # to ~1e-6, making logit parity measure decode logic again.
+        cfg = cfg.replace(capacity_factor=16.0, compute_dtype="float32")
     api = get_model(cfg)
     key = jax.random.PRNGKey(0)
     params = api.init(key)

@@ -5,17 +5,9 @@ Covers: lowering+compile of train & decode steps on a (2,4) mesh, collective
 presence, elastic checkpoint restore under a different mesh shape, and DP
 loss equivalence vs single-device."""
 
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
-ROOT = os.path.join(os.path.dirname(__file__), "..")
-
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
     import numpy as np
@@ -96,17 +88,9 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_mini_mesh_distribution(tmp_path):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env["CKPT_DIR"] = str(tmp_path)
-    env.pop("XLA_FLAGS", None)
-    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=900)
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines()
-            if l.startswith("RESULT:")][-1]
-    out = json.loads(line[len("RESULT:"):])
+def test_mini_mesh_distribution(tmp_path, run_forced_devices):
+    out = run_forced_devices(SCRIPT, n_devices=8,
+                             env={"CKPT_DIR": str(tmp_path)})
     assert out["train_compiles"] and out["decode_compiles"]
     assert out["has_collective"]
     assert out["elastic_restore"]
