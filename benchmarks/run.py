@@ -15,6 +15,25 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
 
+def _snapshot_meta() -> dict:
+    """Provenance block for BENCH_*.json: which commit produced these
+    numbers, when, and on what host — without it a committed snapshot is
+    just a table of context-free floats."""
+    import datetime
+    import socket
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_ROOT, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 - not a checkout / no git binary
+        sha = "unknown"
+    return {"git_sha": sha,
+            "timestamp_utc": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"),
+            "hostname": socket.gethostname()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -43,13 +62,20 @@ def main() -> None:
         ("kvcache", kvcache_bench.run),
         ("spec", spec_bench.run),
     ]
+    meta = _snapshot_meta() if args.json else None
     print("name,us_per_call,derived")
     for name, fn in suites:
         if only and name not in only:
             continue
+        kw = {}
+        if name == "serve" and args.json:
+            # the serve suite also dumps its measured run's request-
+            # lifecycle trace: the Perfetto artifact CI uploads next to
+            # BENCH_serve.json
+            kw["trace_out"] = os.path.join(_ROOT, "BENCH_serve_trace.json")
         rows = []
         try:
-            for row in fn(quick=quick):
+            for row in fn(quick=quick, **kw):
                 n, us, derived = row
                 print(f"{n},{us:.2f},{derived}")
                 rows.append({"name": n, "us_per_call": round(us, 2),
@@ -60,7 +86,8 @@ def main() -> None:
         if args.json and rows is not None:
             import jax
             snap = {"suite": name, "jax": jax.__version__,
-                    "backend": jax.default_backend(), "rows": rows}
+                    "backend": jax.default_backend(), "meta": meta,
+                    "rows": rows}
             path = os.path.join(_ROOT, f"BENCH_{name}.json")
             with open(path, "w") as f:
                 json.dump(snap, f, indent=2)

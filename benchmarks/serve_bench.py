@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import get_model
-from repro.serving import BucketEngine, ServeEngine
+from repro.serving import BucketEngine, ServeEngine, Telemetry
 from repro.serving.scheduler import poisson_workload, prefix_workload
 
 
@@ -41,30 +41,32 @@ def bench_bucket(api, params, workload, *, max_batch, max_len):
 
 
 def bench_slot(api, params, workload, *, max_batch, max_len,
-               latency: dict | None = None, **eng_kw):
+               telemetry=None, **eng_kw):
     eng = ServeEngine(api, params, max_batch=max_batch, max_len=max_len,
-                      **eng_kw)
-    results, toks, dt = _drive(eng, workload, latency)
+                      telemetry=telemetry, **eng_kw)
+    results, toks, dt = _drive(eng, workload)
     return results, toks, dt, eng
 
 
-def _pct_rows(prefix, latency):
-    """p50/p99 TTFT + inter-token-latency rows from a _drive latency dict."""
+def _pct_rows(prefix, telemetry):
+    """p50/p99 TTFT + inter-token-latency rows read from the engine's own
+    telemetry registry (serving/telemetry.py) — the identical histograms
+    a production metrics scrape sees, so the bench can no longer drift
+    from what the serving stack actually measures."""
     rows = []
-    for metric in ("ttft", "itl"):
-        xs = latency.get(metric) or []
-        if not xs:
+    for metric, hist in (("ttft", telemetry.ttft), ("itl", telemetry.itl)):
+        if not hist.count:
             continue
-        p50, p99 = np.percentile(xs, [50, 99])
-        rows.append((f"{prefix}_{metric}_p50", p50 * 1e6,
-                     f"{p50 * 1e3:.1f} ms"))
-        rows.append((f"{prefix}_{metric}_p99", p99 * 1e6,
-                     f"{p99 * 1e3:.1f} ms"))
+        for q in (50, 99):
+            v = hist.percentile(q)
+            rows.append((f"{prefix}_{metric}_p{q}", v * 1e6,
+                         f"{v * 1e3:.1f} ms"))
     return rows
 
 
 def run(quick: bool = True, *, requests: int | None = None,
-        max_batch: int | None = None, rate: float = 1.0, seed: int = 0):
+        max_batch: int | None = None, rate: float = 1.0, seed: int = 0,
+        trace_out: str | None = None):
     requests = requests if requests is not None else (24 if quick else 64)
     max_batch = max_batch if max_batch is not None else (4 if quick else 8)
     cfg = smoke_config("stablelm-3b")
@@ -77,10 +79,10 @@ def run(quick: bool = True, *, requests: int | None = None,
 
     _, btoks, bdt, _ = bench_bucket(api, params, workload,
                                     max_batch=max_batch, max_len=max_len)
-    lat = {}
+    tm = Telemetry()
     _, stoks, sdt, eng = bench_slot(api, params, workload,
                                     max_batch=max_batch, max_len=max_len,
-                                    latency=lat)
+                                    telemetry=tm)
     assert btoks == stoks, (btoks, stoks)
     rows = [
         ("serve/bucket_tok_s", bdt / btoks * 1e6, f"{btoks / bdt:.1f} tok/s"),
@@ -94,7 +96,14 @@ def run(quick: bool = True, *, requests: int | None = None,
         ("serve/slot_kv_bytes", 0.0,
          f"{eng.stats['kv_bytes'] / 1024:.1f} KiB resident"),
     ]
-    rows += _pct_rows("serve/slot", lat)
+    rows += _pct_rows("serve/slot", tm)
+    if trace_out:
+        # the Perfetto artifact CI uploads next to BENCH_serve.json: the
+        # measured run's request-lifecycle spans, straight from the tracer
+        import json
+        with open(trace_out, "w") as f:
+            json.dump(tm.chrome_trace(), f)
+        print(f"# wrote {trace_out}", file=sys.stderr)
     rows += _mesh_rows(quick, requests=requests, max_batch=max_batch,
                        rate=rate, seed=seed)
     return rows
@@ -128,15 +137,16 @@ rows = []
 ref = None
 for name, mesh in (("1dev", None),
                    (f"mesh{n}", make_mesh((n,), ("model",)))):
-    from repro.serving import ServeEngine
+    from repro.serving import ServeEngine, Telemetry
+    tm = Telemetry()
     eng = ServeEngine(api, params, max_batch=max_batch, max_len=64,
-                      mesh=mesh)
+                      mesh=mesh, telemetry=tm)
     # compile every prefill bucket + the decode step outside the timed
     # drive: GSPMD partitioning makes the mesh engine's compiles much
     # slower, and compile time is not what this row prices
     serve_bench._drive(eng, warmup)
-    lat = {}
-    res, toks, dt = serve_bench._drive(eng, workload, lat)
+    tm.reset()           # drop warmup latencies; measured drive only
+    res, toks, dt = serve_bench._drive(eng, workload)
     if ref is None:
         ref = res
     else:
@@ -144,7 +154,7 @@ for name, mesh in (("1dev", None),
             "mesh outputs diverged from single-device"
     rows.append((f"serve/{name}_tok_s", dt / toks * 1e6,
                  f"{toks / dt:.1f} tok/s"))
-    rows += serve_bench._pct_rows(f"serve/{name}", lat)
+    rows += serve_bench._pct_rows(f"serve/{name}", tm)
     rows.append((f"serve/{name}_kv_bytes_per_dev", 0.0,
                  f"{eng.stats['kv_bytes_per_device'] / 1024:.1f} KiB"))
 print("RESULT:" + json.dumps(rows))
@@ -210,56 +220,33 @@ def _trained_smoke_lm(steps: int = 200):
     return cfg, api, params
 
 
-def _drive(eng, workload, latency: dict | None = None):
+def _drive(eng, workload):
     """Feed a workload into an existing engine (arrival clock = decode
     steps) and time it; returns (results for these rids, tokens, dt).
 
-    ``latency``, when given, is filled with two lists of seconds:
-    ``ttft`` (per request, arrival -> first generated token) and ``itl``
-    (every subsequent inter-token gap; a speculative wave that lands k
-    tokens in one step contributes k gaps of step_time/k). Throughput
+    This used to hand-roll TTFT/ITL capture by diffing slot state after
+    every tick; that measurement now lives where the requests do — the
+    engine's telemetry (serving/telemetry.py) stamps arrival at
+    add_request and token emissions inside each tick, so benchmarks and
+    production read one source of truth. Construct the engine with
+    ``telemetry=Telemetry()`` and read the ``serve_ttft_seconds`` /
+    ``serve_itl_seconds`` histograms back via ``_pct_rows``. Throughput
     alone hides scheduling pathologies — a bucket engine can post decent
     tok/s while late arrivals starve behind a draining group — so the
     percentile columns ride next to tok/s in every serve row."""
     pending = sorted(workload, key=lambda w: w[0])
     base = eng.step_count
     rids = []
-    arrive, counts, last_t = {}, {}, {}
-    ttft, itl = [], []
     t0 = time.time()
     while pending or eng.queue or any(s is not None for s in eng.slots):
-        now = time.time()
         while pending and pending[0][0] <= eng.step_count - base:
             _, prompt, max_new = pending.pop(0)
-            rid = eng.add_request(prompt, max_new=max_new)
-            rids.append(rid)
-            arrive[rid], counts[rid] = now, 0
+            rids.append(eng.add_request(prompt, max_new=max_new))
         stepped = eng.step()
-        if latency is not None:
-            now = time.time()
-            emitted = {s.rid: len(s.out) for s in eng.slots
-                       if s is not None and s.rid in counts}
-            for rid, out in eng.results.items():
-                if rid in counts:
-                    emitted[rid] = len(out)
-            for rid, n in emitted.items():
-                prev = counts[rid]
-                if n <= prev:
-                    continue
-                fresh = n - prev
-                if prev == 0:
-                    ttft.append(now - arrive[rid])
-                    fresh -= 1
-                    last_t[rid] = now
-                if fresh:
-                    itl.extend([(now - last_t[rid]) / fresh] * fresh)
-                last_t[rid], counts[rid] = now, n
         if not stepped and pending:
             eng.step_count = max(eng.step_count + 1,
                                  base + pending[0][0])
     dt = time.time() - t0
-    if latency is not None:
-        latency["ttft"], latency["itl"] = ttft, itl
     results = {r: eng.results[r] for r in rids}
     return results, sum(len(v) for v in results.values()), dt
 

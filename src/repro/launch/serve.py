@@ -9,6 +9,21 @@ Tensor-parallel serving (N-way "model" mesh; on CPU force N host devices):
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
       --requests 8 --mesh 2 --prefill-chunk 16
+
+Telemetry (serving/telemetry.py; slot engine only, host-side, zero extra
+device work): ``--metrics-out metrics.json`` writes the metrics registry
+(``.prom`` extension switches to Prometheus text exposition),
+``--trace-out trace.json`` writes the request-lifecycle span trace as
+Chrome trace-event JSON — open https://ui.perfetto.dev and drag the file
+in to see queued -> prefill -> first-token -> decode/spec-wave per
+request next to the engine's per-tick phase lane. ``--stats-every N``
+logs a one-line summary every N ticks; ``--xla-profile DIR`` addition-
+ally records a jax.profiler device trace (degrades to a one-time warning
+on backends without profiler support):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
+      --requests 8 --trace-out /tmp/serve_trace.json \
+      --metrics-out /tmp/serve_metrics.json --stats-every 8
 """
 
 from __future__ import annotations
@@ -88,6 +103,23 @@ def main(argv=None):
                          "the verify path so long-context prefill holds "
                          "O(batch*C) activations (0 = monolithic; power "
                          "of two; slot engine, GQA archs only)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the telemetry metrics registry here at "
+                         "exit: JSON by default, Prometheus text "
+                         "exposition when PATH ends in .prom (slot "
+                         "engine only)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write the request-lifecycle span trace here as "
+                         "Chrome trace-event JSON (load in Perfetto; "
+                         "slot engine only)")
+    ap.add_argument("--xla-profile", default="", metavar="DIR",
+                    help="also record a jax.profiler device trace into "
+                         "DIR (TensorBoard/Perfetto readable); warns "
+                         "once and keeps serving if the backend has no "
+                         "profiler support")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="log a one-line telemetry summary every N "
+                         "engine ticks (0 = off; slot engine only)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -122,6 +154,11 @@ def main(argv=None):
                      "XLA_FLAGS=--xla_force_host_platform_device_count="
                      f"{args.mesh})")
         mesh = make_mesh((args.mesh,), ("model",))
+    telemetry = None
+    if args.metrics_out or args.trace_out or args.stats_every \
+            or args.xla_profile:
+        from repro.serving.telemetry import Telemetry
+        telemetry = Telemetry()
     if cls is ServeEngine:
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
@@ -130,12 +167,15 @@ def main(argv=None):
                   prefix_cache=args.prefix_cache,
                   spec_k=spec_k, spec_draft="binary",
                   spec_draft_impl=args.spec_draft_impl, mesh=mesh,
-                  prefill_chunk=args.prefill_chunk)
+                  prefill_chunk=args.prefill_chunk, telemetry=telemetry)
     else:
         if args.kv_block_size or args.prefix_cache or stop or spec_k \
                 or args.prefill_chunk:
             ap.error("--kv-block-size/--prefix-cache/--stop-tokens/"
                      "--spec-decode/--prefill-chunk need the slot engine")
+        if telemetry is not None:
+            ap.error("--metrics-out/--trace-out/--xla-profile/"
+                     "--stats-every need the slot engine")
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
                   attn_impl=args.attn_impl, kv_cache=args.kv_cache,
@@ -148,12 +188,40 @@ def main(argv=None):
             eng.add_request(prompt, max_new=args.max_new, stop_tokens=stop)
         else:
             eng.add_request(prompt, max_new=args.max_new)
+    profiling = False
+    if args.xla_profile:
+        from repro.serving.telemetry import start_xla_profiler
+        profiling = start_xla_profiler(args.xla_profile)
     t0 = time.time()
-    results = eng.run()
+    if args.stats_every:
+        ticks = 0
+        while eng.step():
+            ticks += 1
+            if ticks % args.stats_every == 0:
+                log.info("tick %d: %s", ticks, telemetry.summary_line())
+        results = dict(eng.results)
+    else:
+        results = eng.run()
     dt = time.time() - t0
+    if profiling:
+        from repro.serving.telemetry import stop_xla_profiler
+        stop_xla_profiler(profiling)
+        log.info("wrote jax.profiler device trace to %s", args.xla_profile)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            if args.metrics_out.endswith(".prom"):
+                f.write(telemetry.metrics_prometheus())
+            else:
+                f.write(telemetry.metrics_json(indent=2) + "\n")
+        log.info("wrote metrics to %s", args.metrics_out)
+    if args.trace_out:
+        import json
+        with open(args.trace_out, "w") as f:
+            json.dump(telemetry.chrome_trace(), f)
+        log.info("wrote Perfetto-loadable trace to %s", args.trace_out)
     toks = sum(len(v) for v in results.values())
     log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
-             len(results), toks, dt, toks / dt)
+             len(results), toks, dt, toks / max(dt, 1e-9))
     if isinstance(eng, ServeEngine):
         log.info("slot utilization %.1f%%, stats %s",
                  eng.utilization() * 100, eng.stats)

@@ -1,2 +1,4 @@
 from repro.serving.bucket import BucketEngine  # noqa: F401
 from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.telemetry import (MetricsRegistry,  # noqa: F401
+                                     Telemetry, Tracer)

@@ -58,6 +58,16 @@ dispatches per wave (wave + accept-driven length reset) where PR 5 paid
 ``spec_draft_impl`` picks the packed-matmul lowering inside the draft
 ("auto" | "xla_xnor" | "int8_mxu" | "pallas_xnor" — exact-int32 twins,
 see kernels/ops.py), threaded through ``ModelConfig`` like ``attn_impl``.
+
+Telemetry (``telemetry=``, serving/telemetry.py) threads a metrics
+registry + lifecycle tracer through every path above: request spans
+(queued -> admitted -> first token -> generate -> finished), per-phase
+tick histograms (prefill wave / decode tick / spec wave), queue-wait,
+TTFT/ITL, and cache-pressure gauges. The contract is **zero extra device
+work**: every hook reads host clocks and host integers the engine already
+holds, so telemetry on vs. off is token-identical with an equal
+jitted-dispatch count (tests/test_telemetry.py asserts both). ``stats``
+stays the cheap always-on dict; ``STATS_SCHEMA`` documents its keys.
 """
 
 from __future__ import annotations
@@ -73,6 +83,28 @@ from repro.serving.kvcache import kv_pool_bytes
 from repro.serving.prefix import PrefixPool
 from repro.serving.scheduler import (FifoScheduler, Request, accept_wave,
                                      bucket_len, make_buckets, pad_group)
+
+
+# every ServeEngine.stats key, its type, and what it counts — the schema
+# tests/test_telemetry.py holds the dict to (ad-hoc keys don't ship)
+STATS_SCHEMA = {
+    "decode_steps": (int, "engine ticks (decode steps or spec waves)"),
+    "occupied_slot_steps": (int, "sum over ticks of occupied slots"),
+    "prefills": (int, "admission prefill waves launched"),
+    "admitted": (int, "requests admitted into a slot"),
+    "evictions": (int, "requests finished and evicted"),
+    "generated_tokens": (int, "tokens emitted across all requests"),
+    "prefilled_tokens": (int, "tokens run through prefill attention"),
+    "cached_prompt_tokens": (int, "prompt tokens served from the radix "
+                                  "prefix cache instead of prefill"),
+    "spec_waves": (int, "speculative draft/verify waves run"),
+    "spec_drafted": (int, "draft tokens proposed"),
+    "spec_accepted": (int, "draft tokens accepted by verify"),
+    "spec_draft_launches": (int, "device launches spent drafting"),
+    "kv_bytes": (int, "resident bytes of the preallocated KV pool"),
+    "kv_bytes_per_device": (int, "per-device shard of kv_bytes "
+                                 "(== kv_bytes / mesh size)"),
+}
 
 
 @dataclasses.dataclass
@@ -92,7 +124,7 @@ class ServeEngine:
                  prefix_cache: bool = False, n_blocks: int | None = None,
                  spec_k: int = 0, spec_draft: str = "binary",
                  spec_draft_impl: str | None = None, mesh=None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, telemetry=None):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
@@ -164,8 +196,12 @@ class ServeEngine:
         self._next_rid = 0
         self.queue: list[Request] = []
         self.results: dict[int, list[int]] = {}
+        # host-side observer; None = the exact pre-telemetry engine (tests
+        # assert telemetry on/off is token-identical with equal dispatches)
+        self.tm = telemetry
+        _reg = telemetry.registry if telemetry is not None else None
         self.buckets = make_buckets(max_len, min_bucket=min_bucket)
-        self.sched = FifoScheduler(self.buckets)
+        self.sched = FifoScheduler(self.buckets, metrics=_reg)
         # slot table: per-slot request (None = free), next token to feed
         self.slots: list[Request | None] = [None] * max_batch
         self.next_tok = np.zeros((max_batch, 1), np.int32)
@@ -184,7 +220,7 @@ class ServeEngine:
                              else max_batch * self.n_pages)
             self.caches = api.init_paged_cache(self.n_blocks, bs,
                                                max_batch, self.n_pages)
-            self.pool = PrefixPool(self.n_blocks, bs)
+            self.pool = PrefixPool(self.n_blocks, bs, metrics=_reg)
             self._pstate: dict[int, _PagedSlot] = {}
             self._codec = kvc.get_codec(api.cfg.kv_cache)
             self._hole_row = np.full((self.n_pages,), self.n_blocks,
@@ -232,6 +268,13 @@ class ServeEngine:
                       # device, ~kv_bytes/model on a model-axis mesh
                       "kv_bytes_per_device":
                           kvc.kv_pool_bytes_per_device(self.caches)}
+        if self.tm is not None:
+            self.tm.engine_started(
+                kv_bytes=self.stats["kv_bytes"],
+                kv_bytes_per_device=self.stats["kv_bytes_per_device"],
+                max_batch=max_batch,
+                n_blocks=self.n_blocks if self.paged else None,
+                byte_breakdown=kvc.kv_pool_byte_breakdown(self.caches))
 
         def outs(*sh):
             # pin pool-returning jits' output shardings under a mesh so the
@@ -372,6 +415,8 @@ class ServeEngine:
         self.queue.append(Request(rid, prompt, max_new,
                                   stop_tokens=frozenset(
                                       int(t) for t in stop_tokens)))
+        if self.tm is not None:
+            self.tm.request_added(rid, len(prompt))
         return rid
 
     # -- sampling -----------------------------------------------------------
@@ -403,6 +448,10 @@ class ServeEngine:
         self.results[r.rid] = r.out
         self.slots[slot] = None
         self.stats["evictions"] += 1
+        if self.tm is not None:
+            reason = ("stop" if r.out and r.out[-1] in r.stop_tokens
+                      and len(r.out) < r.max_new else "max_new")
+            self.tm.request_finished(r.rid, reason)
         if self.paged:
             st = self._pstate.pop(slot)
             self.pool.release(st.chain)
@@ -446,6 +495,7 @@ class ServeEngine:
             for j, r in enumerate(group):
                 toks[j, :len(r.prompt)] = r.prompt
                 lens[j] = len(r.prompt)
+            t0 = self.tm.clock() if self.tm is not None else 0.0
             logits, new = self._prefill(self.params, jnp.asarray(toks),
                                         jnp.asarray(lens))
             rows = list(group) + [None] * (gp - len(group))
@@ -455,11 +505,21 @@ class ServeEngine:
             idx[:len(group)] = free[:len(group)]
             self.caches = self._insert(self.caches, new, jnp.asarray(idx))
             self.stats["prefills"] += 1
+            now = 0.0
+            if self.tm is not None:
+                now = self.tm.clock()
+                self.tm.prefill_wave(t0, n_reqs=len(group), bucket=blen,
+                                     now=now)
             for j, r in enumerate(group):
                 slot = int(idx[j])
                 self.slots[slot] = r
                 self.stats["admitted"] += 1
                 self.stats["prefilled_tokens"] += len(r.prompt)
+                if self.tm is not None:
+                    self.tm.request_admitted(
+                        r.rid, slot=slot, prefilled_tokens=len(r.prompt),
+                        now=now)
+                    self.tm.tokens_emitted(r.rid, 1, now=now)
                 self._append_token(slot, int(nxt[j]))
             free = [i for i, r in enumerate(self.slots) if r is None]
 
@@ -540,6 +600,7 @@ class ServeEngine:
             # suffix-cache page i lands in the slot's page ctx_pages + i
             n_suffix_pages = self.n_pages - ctx_pages
             dest[j, :n_suffix_pages] = rows[j, ctx_pages:]
+        t0 = self.tm.clock() if self.tm is not None else 0.0
         if max_ctx_pages == 0:
             logits, new = self._prefill(self.params, jnp.asarray(toks),
                                         jnp.asarray(lens))
@@ -569,6 +630,11 @@ class ServeEngine:
                                          jnp.asarray(plens),
                                          jnp.asarray(slot_idx))
         self.stats["prefills"] += 1
+        now = 0.0
+        if self.tm is not None:
+            now = self.tm.clock()
+            self.tm.prefill_wave(t0, n_reqs=len(group), bucket=blen,
+                                 now=now)
         for j, (r, chain, blocks) in enumerate(admitted):
             slot = slots[j]
             self.slots[slot] = r
@@ -578,6 +644,11 @@ class ServeEngine:
             self.stats["admitted"] += 1
             self.stats["prefilled_tokens"] += int(lens[j])
             self.stats["cached_prompt_tokens"] += int(ctx_lens[j])
+            if self.tm is not None:
+                self.tm.request_admitted(
+                    r.rid, slot=slot, prefilled_tokens=int(lens[j]),
+                    cached_tokens=int(ctx_lens[j]), now=now)
+                self.tm.tokens_emitted(r.rid, 1, now=now)
             self.pool.record_hit(chain)
             if self.prefix_on:
                 # publish the prompt's full blocks beyond the matched
@@ -611,12 +682,17 @@ class ServeEngine:
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return False
+        t0 = self.tm.clock() if self.tm is not None else 0.0
         logits, self.caches = self._decode(self.params, self.caches,
                                            jnp.asarray(self.next_tok))
         nxt = self._sample(logits, list(self.slots))
         self.step_count += 1
         self.stats["decode_steps"] += 1
         self.stats["occupied_slot_steps"] += len(active)
+        now = 0.0
+        if self.tm is not None:
+            now = self.tm.clock()
+            self.tm.decode_tick(t0, n_active=len(active), now=now)
         for i in active:
             r = self.slots[i]
             if self.paged and self.prefix_on:
@@ -626,7 +702,11 @@ class ServeEngine:
                 cur = st.plen + len(r.out)       # cache len after this tick
                 if cur % self.block_size == 0:
                     self._publish_block(st, cur // self.block_size - 1, r)
+            if self.tm is not None:
+                self.tm.tokens_emitted(r.rid, 1, now=now)
             self._append_token(i, int(nxt[i]))
+        if self.tm is not None:
+            self.tm.update_gauges(self._telemetry_gauges())
         return True
 
     def _step_spec(self) -> bool:
@@ -662,6 +742,7 @@ class ServeEngine:
         # appended past base_len), rewind, one float verify scoring k+1
         # positions with exact K/V, candidate selection from each
         # request's own (rid, step) stream
+        t0 = self.tm.clock() if self.tm is not None else 0.0
         tok_mat, cand, self.caches = self._spec_wave(
             self.params, self.draft_params, self.caches,
             jnp.asarray(self.next_tok), jnp.asarray(rids),
@@ -688,8 +769,24 @@ class ServeEngine:
         self.stats["decode_steps"] += 1
         self.stats["spec_waves"] += 1
         self.stats["occupied_slot_steps"] += len(active)
+        now = 0.0
+        if self.tm is not None:
+            now = self.tm.clock()
+            self.tm.spec_wave(
+                t0, n_active=len(active), k=k,
+                accepted=sum(len(w) - 1 for w in wave.values()), now=now)
         for i in active:
             r = self.slots[i]
+            if self.tm is not None:
+                # tokens actually emitted this wave: the accept rule's
+                # output, cut at max_new or the first stop token — the
+                # same rule the _append_token loop below applies
+                n_emit, room = 0, r.max_new - len(r.out)
+                for tok in wave[i]:
+                    n_emit += 1
+                    if n_emit >= room or int(tok) in r.stop_tokens:
+                        break
+                self.tm.tokens_emitted(r.rid, n_emit, now=now)
             for tok in wave[i]:
                 if self.paged and self.prefix_on:
                     # same crossing rule as the plain tick: the wave's
@@ -705,7 +802,34 @@ class ServeEngine:
                     # finished (max_new / stop token): the rest of the
                     # wave is discarded — neither emitted nor counted
                     break
+        if self.tm is not None:
+            self.tm.update_gauges(self._telemetry_gauges())
         return True
+
+    def _telemetry_gauges(self) -> dict:
+        """Instantaneous cache-pressure / occupancy values, all host-side
+        (slot table, queue, the paged pool's free list — never a device
+        array). Every ratio is zero-division-guarded: a scrape before the
+        first tick reads 0.0, not a crash."""
+        occ = sum(1 for s in self.slots if s is not None)
+        g = {"serve_slots_occupied": occ,
+             "serve_queue_depth": len(self.queue),
+             "serve_slot_occupancy": occ / self.max_batch
+             if self.max_batch else 0.0}
+        if self.paged:
+            free = len(self.pool.free)
+            g["kv_blocks_free"] = free
+            g["kv_pool_occupancy"] = (1.0 - free / self.n_blocks
+                                      if self.n_blocks else 0.0)
+        else:
+            g["kv_pool_occupancy"] = g["serve_slot_occupancy"]
+        if self.prefix_on:
+            hit = self.stats["cached_prompt_tokens"]
+            tot = hit + self.stats["prefilled_tokens"]
+            g["serve_prefix_hit_rate"] = hit / tot if tot else 0.0
+        if self.spec_k:
+            g["serve_spec_acceptance"] = self.acceptance_rate()
+        return g
 
     def acceptance_rate(self) -> float:
         """Fraction of draft tokens the verify pass accepted."""

@@ -100,6 +100,31 @@ def kv_pool_bytes(caches) -> int:
     return total
 
 
+def kv_pool_byte_breakdown(caches) -> dict:
+    """Resident pool bytes split by leaf role — the codec trade, itemized:
+
+      values   quantized/raw K/V data leaves (k/v, packed k_q/v_q, ...)
+      scales   per-(token, head) dequant scales (``*_s`` leaves)
+      index    the tiny ``len`` / ``table`` bookkeeping leaves
+
+    Host-side only (shape/dtype arithmetic, no device reads) — this is
+    what the telemetry registry exposes as kv_pool_*_bytes gauges, so a
+    scrape shows *where* the binary codec's 12.8x cut comes from (values
+    collapse, scales become the visible share).
+    """
+    out = {"values": 0, "scales": 0, "index": 0}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        key = getattr(path[-1], "key", None)
+        nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        if key in ("len", "table"):
+            out["index"] += nbytes
+        elif isinstance(key, str) and key.endswith("_s"):
+            out["scales"] += nbytes
+        else:
+            out["values"] += nbytes
+    return out
+
+
 def kv_pool_bytes_per_device(caches) -> int:
     """Resident cache bytes *per device*: the shard each device actually
     holds, summed over the same leaves as kv_pool_bytes. Equal to

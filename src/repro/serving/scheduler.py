@@ -66,10 +66,26 @@ class FifoScheduler:
     ``select`` never reorders across the queue head: the group is always
     anchored on the oldest waiting request, so no request can be starved by
     a stream of easier-to-batch arrivals.
+
+    ``metrics`` (a telemetry MetricsRegistry, or None) makes admission
+    decisions observable: how often select runs, how big the groups it
+    forms are, and how many bucket-incompatible requests each decision
+    left waiting — the "why is my request queued" counter.
     """
 
-    def __init__(self, buckets: tuple[int, ...]):
+    def __init__(self, buckets: tuple[int, ...], metrics=None):
         self.buckets = buckets
+        self._selects = self._group_size = self._left_waiting = None
+        if metrics is not None:
+            self._selects = metrics.counter(
+                "sched_selects_total", "admission decisions taken")
+            self._group_size = metrics.histogram(
+                "sched_group_size", "requests batched per admission group",
+                buckets=tuple(float(2 ** i) for i in range(11)))
+            self._left_waiting = metrics.counter(
+                "sched_left_waiting_total",
+                "queued requests an admission decision could not batch "
+                "(wrong bucket or no free slot)")
 
     def select(self, queue: list[Request], n_free: int,
                length_of=None) -> list[Request]:
@@ -85,7 +101,13 @@ class FifoScheduler:
         head_bucket = bucket_len(length_of(queue[0]), self.buckets)
         group = [r for r in queue
                  if bucket_len(length_of(r), self.buckets) == head_bucket]
-        return group[:n_free]
+        group = group[:n_free]
+        if self._selects is not None:
+            self._selects.inc()
+            if group:
+                self._group_size.observe(len(group))
+            self._left_waiting.inc(len(queue) - len(group))
+        return group
 
 
 def accept_wave(candidates, drafts) -> list[int]:
