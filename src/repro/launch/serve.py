@@ -43,6 +43,47 @@ from repro.train import checkpoint as C
 log = logging.getLogger("repro.serve")
 
 
+def _flush_telemetry(args, telemetry):
+    """Write --metrics-out / --trace-out. Called from a finally so an
+    interrupted or crashed run still leaves parseable files behind."""
+    if telemetry is None:
+        return
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            if args.metrics_out.endswith(".prom"):
+                f.write(telemetry.metrics_prometheus())
+            else:
+                f.write(telemetry.metrics_json(indent=2) + "\n")
+        log.info("wrote metrics to %s", args.metrics_out)
+    if args.trace_out:
+        import json
+        with open(args.trace_out, "w") as f:
+            json.dump(telemetry.chrome_trace(), f)
+        log.info("wrote Perfetto-loadable trace to %s", args.trace_out)
+
+
+def _serve_http(args, eng, telemetry):
+    """--http mode: hand the engine to the SSE front door and block until
+    Ctrl-C. Telemetry flushes on the way out like the batch drive."""
+    from repro.launch.server import FrontDoor
+    fd = FrontDoor(eng, host=args.http_host, port=args.http,
+                   queue_limit=args.queue_limit)
+    fd.start()
+    log.info("serving on http://%s:%d (POST /v1/generate, GET /healthz, "
+             "GET /metrics); Ctrl-C to stop", fd.host, fd.port)
+    try:
+        while True:
+            time.sleep(1.0)
+            if args.stats_every and telemetry is not None:
+                log.info("%s", telemetry.summary_line())
+    except KeyboardInterrupt:
+        log.info("shutting down")
+    finally:
+        fd.close()
+        _flush_telemetry(args, telemetry)
+    return dict(eng.results)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="stablelm-3b")
@@ -120,6 +161,28 @@ def main(argv=None):
     ap.add_argument("--stats-every", type=int, default=0, metavar="N",
                     help="log a one-line telemetry summary every N "
                          "engine ticks (0 = off; slot engine only)")
+    ap.add_argument("--interleave", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="interleaved prefill: run one decode-tick-sized "
+                         "prefill slice per tick beside the decode batch "
+                         "instead of blocking whole waves (slot engine, "
+                         "GQA archs; default on in --http mode)")
+    ap.add_argument("--scheduler", default="fifo", choices=["fifo", "slo"],
+                    help="admission policy: fifo, or slo (SLO-class-aware "
+                         "with a hard starvation bound; classes: "
+                         "interactive > standard > batch)")
+    ap.add_argument("--http", type=int, default=0, metavar="PORT",
+                    help="serve over HTTP/SSE instead of a synthetic "
+                         "batch: POST /v1/generate (per-token streaming "
+                         "with \"stream\": true), GET /healthz, GET "
+                         "/metrics. Runs until Ctrl-C. Port 0 picks a "
+                         "free port (logged at startup)")
+    ap.add_argument("--http-host", default="127.0.0.1",
+                    help="bind address for --http")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="bounded HTTP admission queue: beyond this many "
+                         "waiting submissions, POSTs answer 429 + "
+                         "Retry-After (backpressure, not buffering)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
 
@@ -156,9 +219,20 @@ def main(argv=None):
         mesh = make_mesh((args.mesh,), ("model",))
     telemetry = None
     if args.metrics_out or args.trace_out or args.stats_every \
-            or args.xla_profile:
+            or args.xla_profile or args.http:
         from repro.serving.telemetry import Telemetry
         telemetry = Telemetry()
+    # interleaved prefill defaults on behind the HTTP front door (ITL of
+    # streaming clients is what it protects) and off for the synthetic
+    # batch drive; archs without the slice seam fall back with a warning
+    # unless the flag was explicit
+    interleave = (bool(args.http) if args.interleave is None
+                  else args.interleave)
+    if interleave and api.prefill_slice is None \
+            and args.interleave is None:
+        log.warning("family %r has no prefill slice step; running "
+                    "blocking prefill waves", cfg.family)
+        interleave = False
     if cls is ServeEngine:
         eng = cls(api, params, max_batch=args.max_batch, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
@@ -167,12 +241,15 @@ def main(argv=None):
                   prefix_cache=args.prefix_cache,
                   spec_k=spec_k, spec_draft="binary",
                   spec_draft_impl=args.spec_draft_impl, mesh=mesh,
-                  prefill_chunk=args.prefill_chunk, telemetry=telemetry)
+                  prefill_chunk=args.prefill_chunk, telemetry=telemetry,
+                  interleave=interleave, scheduler=args.scheduler)
     else:
         if args.kv_block_size or args.prefix_cache or stop or spec_k \
-                or args.prefill_chunk:
+                or args.prefill_chunk or args.http or interleave \
+                or args.scheduler != "fifo":
             ap.error("--kv-block-size/--prefix-cache/--stop-tokens/"
-                     "--spec-decode/--prefill-chunk need the slot engine")
+                     "--spec-decode/--prefill-chunk/--http/--interleave/"
+                     "--scheduler slo need the slot engine")
         if telemetry is not None:
             ap.error("--metrics-out/--trace-out/--xla-profile/"
                      "--stats-every need the slot engine")
@@ -180,6 +257,8 @@ def main(argv=None):
                   temperature=args.temperature, seed=args.seed,
                   attn_impl=args.attn_impl, kv_cache=args.kv_cache,
                   mesh=mesh)
+    if args.http:
+        return _serve_http(args, eng, telemetry)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.choice(plens))
@@ -193,32 +272,30 @@ def main(argv=None):
         from repro.serving.telemetry import start_xla_profiler
         profiling = start_xla_profiler(args.xla_profile)
     t0 = time.time()
-    if args.stats_every:
-        ticks = 0
-        while eng.step():
-            ticks += 1
-            if ticks % args.stats_every == 0:
-                log.info("tick %d: %s", ticks, telemetry.summary_line())
+    # the flush lives in a finally: a Ctrl-C (or a mid-run engine error)
+    # must still leave parseable --metrics-out/--trace-out files behind —
+    # a partial trace of a crashed run is exactly when you want the trace
+    try:
+        if args.stats_every:
+            ticks = 0
+            while eng.step():
+                ticks += 1
+                if ticks % args.stats_every == 0:
+                    log.info("tick %d: %s", ticks,
+                             telemetry.summary_line())
+        else:
+            eng.run()
+    except KeyboardInterrupt:
+        log.warning("interrupted; flushing telemetry for the partial run")
+    finally:
         results = dict(eng.results)
-    else:
-        results = eng.run()
-    dt = time.time() - t0
-    if profiling:
-        from repro.serving.telemetry import stop_xla_profiler
-        stop_xla_profiler(profiling)
-        log.info("wrote jax.profiler device trace to %s", args.xla_profile)
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            if args.metrics_out.endswith(".prom"):
-                f.write(telemetry.metrics_prometheus())
-            else:
-                f.write(telemetry.metrics_json(indent=2) + "\n")
-        log.info("wrote metrics to %s", args.metrics_out)
-    if args.trace_out:
-        import json
-        with open(args.trace_out, "w") as f:
-            json.dump(telemetry.chrome_trace(), f)
-        log.info("wrote Perfetto-loadable trace to %s", args.trace_out)
+        dt = time.time() - t0
+        if profiling:
+            from repro.serving.telemetry import stop_xla_profiler
+            stop_xla_profiler(profiling)
+            log.info("wrote jax.profiler device trace to %s",
+                     args.xla_profile)
+        _flush_telemetry(args, telemetry)
     toks = sum(len(v) for v in results.values())
     log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
              len(results), toks, dt, toks / max(dt, 1e-9))

@@ -48,6 +48,15 @@ class ModelApi(NamedTuple):
     # path so live activations are O(B * chunk), not O(B * S). Same
     # (logits, caches) contract as prefill; GQA families only.
     prefill_chunked: Callable | None = None
+    # interleaved prefill (one slice per serving tick): slice_init(batch,
+    # max_len) -> (caches, h_last); prefill_slice(params, caches, tokens,
+    # h_last, seq_lens, pos) appends one chunk's exact K/V and captures
+    # last-token hidden states; prefill_slice_finish(params, caches,
+    # h_last, seq_lens) -> (logits, caches) runs the head once and seals
+    # lengths. GQA families only (the verify path).
+    prefill_slice_init: Callable | None = None
+    prefill_slice: Callable | None = None
+    prefill_slice_finish: Callable | None = None
 
     def init_deployed(self, key):
         """Deploy-time params: binary latents -> packed/int8 weights."""
@@ -98,6 +107,17 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             prefill_chunked=(
                 (lambda p, b, **kw: t.lm_prefill_chunked(p, cfg,
                                                          b["tokens"], **kw))
+                if not cfg.use_mla else None),
+            prefill_slice_init=(
+                (lambda bs, ml: t.lm_prefill_slice_init(cfg, bs, ml))
+                if not cfg.use_mla else None),
+            prefill_slice=(
+                (lambda p, c, tok, h, sl, pos:
+                 t.lm_prefill_slice(p, cfg, c, tok, h, sl, pos))
+                if not cfg.use_mla else None),
+            prefill_slice_finish=(
+                (lambda p, c, h, sl:
+                 t.lm_prefill_slice_finish(p, cfg, c, h, sl))
                 if not cfg.use_mla else None),
         )
     if cfg.family == "vlm":

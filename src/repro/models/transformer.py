@@ -194,6 +194,53 @@ def lm_prefill_chunked(params, cfg: ModelConfig, tokens, *, max_len=None,
     return logits[:, 0], caches
 
 
+def lm_prefill_slice_init(cfg: ModelConfig, batch: int, max_len: int):
+    """Empty state for an interleaved (slice-at-a-time) prefill: transient
+    decode caches at the serving pool's length plus a zero h_last buffer
+    the slices scatter each row's last real hidden state into."""
+    caches = lc.init_segment_caches(cfg, batch, max_len, dtype=lc.cdt(cfg))
+    h_last = jnp.zeros((batch, 1, cfg.d_model), lc.cdt(cfg))
+    return caches, h_last
+
+
+def lm_prefill_slice(params, cfg: ModelConfig, caches, tokens, h_last,
+                     seq_lens, pos):
+    """One slice of an interleaved prefill: lm_prefill_chunked's scan body,
+    unrolled so a serving engine can run one chunk per decode tick instead
+    of the whole prompt in one blocking launch.
+
+    tokens (B, C) are prompt positions pos..pos+C-1 (right-padded rows
+    included); their exact K/V append at cache positions len..len+C-1 via
+    the verify path, and any row whose last real token (seq_lens-1) falls
+    inside this slice has its hidden state captured into h_last (B, 1, d).
+    No head matmul runs here — lm_prefill_slice_finish applies it once to
+    h_last, so a prompt sliced into N ticks pays the same single
+    last-token head cost as the monolithic prefill. ``pos`` is a traced
+    int32 scalar: one compile per (B, C) shape, not per slice offset.
+    """
+    c = tokens.shape[1]
+    x = _embed(params, cfg, tokens)
+    h, caches = lc.segments_verify(params["blocks"], x, cfg, caches)
+    last = seq_lens - 1
+    idx = jnp.clip(last - pos, 0, c - 1).astype(jnp.int32)
+    row = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    hit = (last >= pos) & (last < pos + c)
+    h_last = jnp.where(hit[:, None, None], row, h_last)
+    return h_last, caches
+
+
+def lm_prefill_slice_finish(params, cfg: ModelConfig, caches, h_last,
+                            seq_lens):
+    """Close an interleaved prefill: head matmul on the captured last-token
+    hidden states and cache lengths reset to the true per-row lengths (pad
+    positions past seq_lens become invisible to every later masked read —
+    the same contract as lm_prefill's seq_lens path)."""
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    caches = lc.set_cache_lengths(caches, seq_lens)
+    logits = _logits(params, cfg, h_last)
+    return logits[:, 0], caches
+
+
 def lm_prefill_ctx(params, cfg: ModelConfig, tokens, ctx, ctx_lens, *,
                    max_len, seq_lens):
     """Suffix prefill continuing a cached prefix (the radix prefix cache).

@@ -78,11 +78,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import logging
+
 from repro.serving import kvcache as kvc
 from repro.serving.kvcache import kv_pool_bytes
 from repro.serving.prefix import PrefixPool
-from repro.serving.scheduler import (FifoScheduler, Request, accept_wave,
-                                     bucket_len, make_buckets, pad_group)
+from repro.serving.scheduler import (AdmissionError, FifoScheduler, Request,
+                                     SloScheduler, accept_wave, bucket_len,
+                                     make_buckets, pad_group, slo_rank)
+
+log = logging.getLogger("repro.serving.engine")
 
 
 # every ServeEngine.stats key, its type, and what it counts — the schema
@@ -90,7 +95,12 @@ from repro.serving.scheduler import (FifoScheduler, Request, accept_wave,
 STATS_SCHEMA = {
     "decode_steps": (int, "engine ticks (decode steps or spec waves)"),
     "occupied_slot_steps": (int, "sum over ticks of occupied slots"),
-    "prefills": (int, "admission prefill waves launched"),
+    "prefills": (int, "admission prefill installs (blocking waves or "
+                      "completed interleaved jobs)"),
+    "prefill_jobs": (int, "interleaved prefill jobs started "
+                          "(0 with interleave off)"),
+    "prefill_slices": (int, "interleaved prefill slices run alongside "
+                            "decode ticks"),
     "admitted": (int, "requests admitted into a slot"),
     "evictions": (int, "requests finished and evicted"),
     "generated_tokens": (int, "tokens emitted across all requests"),
@@ -116,6 +126,35 @@ class _PagedSlot:
     private: list                # physical blocks owned by this request
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """One admitted group prefilling a slice per tick (interleave mode).
+
+    Slots are *committed* (counted against free capacity) when the job is
+    created but only assigned at install time, after the last slice; until
+    then the prompt's K/V accumulates in a transient cache the size of one
+    prefill batch — the main pool is untouched, so in-flight decode slots
+    never see a partial prefill (and the contiguous pool's span-write
+    clamp never meets a garbage row)."""
+    admitted: list               # [(Request, chain, blocks)]; contiguous
+    #                              mode uses empty chain/blocks
+    toks: np.ndarray             # (gp, blen) right-padded suffix tokens
+    lens: np.ndarray             # (gp,) true suffix lengths
+    blen: int                    # padded bucket length
+    gp: int                      # padded group size
+    monolithic: bool             # True: one blocking call at dequeue (the
+    #                              cached-prefix path can't slice through
+    #                              gathered context)
+    arrays: dict | None          # paged group arrays (_paged_arrays)
+    todo: int = 0                # slice coverage target (ceil(max lens/c)*c)
+    pos: int = 0                 # prompt tokens already sliced
+    caches: object = None        # transient per-job prefill cache
+    h_last: object = None        # (gp, 1, d) captured last hidden states
+    arrival: int = 0             # min member arrival (job aging)
+    rank: int = 0                # min member SLO rank (job priority)
+    t_start: float = 0.0         # admission-decision clock (telemetry)
+
+
 class ServeEngine:
     def __init__(self, api, params, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
@@ -124,7 +163,9 @@ class ServeEngine:
                  prefix_cache: bool = False, n_blocks: int | None = None,
                  spec_k: int = 0, spec_draft: str = "binary",
                  spec_draft_impl: str | None = None, mesh=None,
-                 prefill_chunk: int = 0, telemetry=None):
+                 prefill_chunk: int = 0, telemetry=None,
+                 interleave: bool = False, slices_per_tick: int = 1,
+                 scheduler: str = "fifo", starvation_limit: int = 64):
         overrides = {}
         if attn_impl is not None:
             overrides["attn_impl"] = attn_impl
@@ -177,6 +218,18 @@ class ServeEngine:
             raise ValueError(
                 f"model {api.cfg.name!r} has no chunked prefill (GQA "
                 "families only); use prefill_chunk=0")
+        self.interleave = bool(interleave)
+        self.slices_per_tick = int(slices_per_tick)
+        if self.interleave and self.slices_per_tick < 1:
+            raise ValueError(
+                f"slices_per_tick must be >= 1, got {slices_per_tick}")
+        if self.interleave and api.prefill_slice is None:
+            raise ValueError(
+                f"model {api.cfg.name!r} has no prefill slice step (GQA "
+                "families only — the verify path); use interleave=False")
+        if scheduler not in ("fifo", "slo"):
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}: expected 'fifo' or 'slo'")
         # -- tensor-parallel serving: a `model`-axis mesh shards attention
         # heads + MLP hidden (the param logical-axis rules) and the KV
         # pool's head axis (cache_partition_specs), so per-device cache
@@ -201,7 +254,20 @@ class ServeEngine:
         self.tm = telemetry
         _reg = telemetry.registry if telemetry is not None else None
         self.buckets = make_buckets(max_len, min_bucket=min_bucket)
-        self.sched = FifoScheduler(self.buckets, metrics=_reg)
+        if scheduler == "slo":
+            self.sched = SloScheduler(self.buckets, metrics=_reg,
+                                      starvation_limit=starvation_limit)
+        else:
+            self.sched = FifoScheduler(self.buckets, metrics=_reg)
+        # interleaved-prefill state: in-flight jobs + slots promised to
+        # them (committed slots are subtracted from free capacity so two
+        # jobs can't both target the same future vacancy)
+        self._jobs: list[_PrefillJob] = []
+        self._committed = 0
+        # slice width: the prefill_chunk knob when set, else the smallest
+        # bucket — "decode-tick-sized" is the contract, and both choices
+        # are powers of two, so slices always tile the padded bucket
+        self.slice_chunk = self.prefill_chunk or self.buckets[0]
         # slot table: per-slot request (None = free), next token to feed
         self.slots: list[Request | None] = [None] * max_batch
         self.next_tok = np.zeros((max_batch, 1), np.int32)
@@ -255,7 +321,8 @@ class ServeEngine:
         # draft tokens proposed, draft tokens accepted by verify —
         # acceptance_rate() = spec_accepted / spec_drafted
         self.stats = {"decode_steps": 0, "occupied_slot_steps": 0,
-                      "prefills": 0, "admitted": 0, "evictions": 0,
+                      "prefills": 0, "prefill_jobs": 0, "prefill_slices": 0,
+                      "admitted": 0, "evictions": 0,
                       "generated_tokens": 0, "prefilled_tokens": 0,
                       "cached_prompt_tokens": 0,
                       "spec_waves": 0, "spec_drafted": 0, "spec_accepted": 0,
@@ -320,6 +387,21 @@ class ServeEngine:
             self._insert = self._meshed(jax.jit(
                 api.cache_insert, donate_argnums=0,
                 **outs(self._cache_sh) if mesh is not None else {}))
+        if self.interleave:
+            # one slice per tick: exact K/V appends into the job's
+            # transient cache (donated — updated in place across slices),
+            # last-token hidden capture, head matmul deferred to finish
+            self._slice = self._meshed(jax.jit(
+                api.prefill_slice, donate_argnums=(1, 3),
+                **outs(self._repl, self._prefill_sh) if mesh is not None
+                else {}))
+            self._slice_finish = self._meshed(jax.jit(
+                api.prefill_slice_finish, donate_argnums=1,
+                **outs(self._repl, self._prefill_sh) if mesh is not None
+                else {}))
+            # per-group-size jitted zero-state builders (the zeros are
+            # created on device, not transferred): O(log max_batch) entries
+            self._slice_inits: dict[int, object] = {}
         seed_key = self._seed_key
 
         def sample_rows(rids, steps, logits, t):
@@ -393,28 +475,56 @@ class ServeEngine:
                 shd.set_logical_rules(*prev)
         return call
 
-    def add_request(self, prompt, max_new: int = 16,
-                    stop_tokens=()) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if len(prompt) == 0:
-            raise ValueError("prompt must contain at least one token")
+    def check_request(self, prompt_len: int, max_new: int,
+                      slo: str = "standard") -> None:
+        """Admission validation, as one pure read-only gate.
+
+        Raises AdmissionError (a ValueError subclass) with a structured
+        code/detail — the per-request rejection the HTTP front door maps
+        to a 400. Every limit that could otherwise detonate inside the
+        tick loop (``bucket_len`` on an over-long prompt would kill the
+        engine mid-tick for every co-resident request) is checked here,
+        against immutable engine config only, so the front door may call
+        it from its HTTP threads before enqueueing."""
+        if prompt_len <= 0:
+            raise AdmissionError(
+                "empty_prompt", "prompt must contain at least one token",
+                prompt_len=int(prompt_len))
         if max_new < 1:
-            raise ValueError(f"max_new must be >= 1, got {max_new}")
-        if len(prompt) + max_new > self.max_len:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
-                f"max_len ({self.max_len})")
-        if self.spec_k and len(prompt) + max_new + self.spec_k > self.max_len:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new}) + spec_k "
-                f"({self.spec_k}) exceeds max_len ({self.max_len}): "
-                "speculative waves write up to spec_k tokens of scratch "
-                "K/V past the last kept position")
+            raise AdmissionError(
+                "bad_max_new", f"max_new must be >= 1, got {max_new}",
+                max_new=int(max_new))
+        slo_rank(slo)                      # raises AdmissionError(bad_slo)
+        if prompt_len > self.buckets[-1]:
+            raise AdmissionError(
+                "prompt_too_long",
+                f"prompt length {prompt_len} exceeds the largest prefill "
+                f"bucket ({self.buckets[-1]})",
+                prompt_len=int(prompt_len), limit=int(self.buckets[-1]))
+        if prompt_len + max_new + self.spec_k > self.max_len:
+            extra = (f" + spec_k ({self.spec_k})" if self.spec_k else "")
+            raise AdmissionError(
+                "too_long",
+                f"prompt ({prompt_len}) + max_new ({max_new}){extra} "
+                f"exceeds max_len ({self.max_len})"
+                + (": speculative waves write up to spec_k tokens of "
+                   "scratch K/V past the last kept position"
+                   if self.spec_k else ""),
+                prompt_len=int(prompt_len), max_new=int(max_new),
+                spec_k=int(self.spec_k), max_len=int(self.max_len))
+
+    def add_request(self, prompt, max_new: int = 16,
+                    stop_tokens=(), slo: str = "standard",
+                    stream=None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        self.check_request(len(prompt), max_new, slo)
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new,
                                   stop_tokens=frozenset(
-                                      int(t) for t in stop_tokens)))
+                                      int(t) for t in stop_tokens),
+                                  slo=slo, arrival=self.step_count,
+                                  stream=stream))
         if self.tm is not None:
             self.tm.request_added(rid, len(prompt))
         return rid
@@ -443,11 +553,24 @@ class ServeEngine:
 
     # -- slot lifecycle -----------------------------------------------------
 
+    def _notify(self, r: Request, tok):
+        """Deliver one stream event (token id, or None = finished) to the
+        request's observer; observer failures must never reach the tick
+        loop (a broken SSE client is that client's problem)."""
+        if r.stream is None:
+            return
+        try:
+            r.stream(tok)
+        except Exception:  # noqa: BLE001 - observer code is untrusted
+            log.exception("stream callback failed for rid %d", r.rid)
+            r.stream = None
+
     def _finish(self, slot: int):
         r = self.slots[slot]
         self.results[r.rid] = r.out
         self.slots[slot] = None
         self.stats["evictions"] += 1
+        self._notify(r, None)
         if self.tm is not None:
             reason = ("stop" if r.out and r.out[-1] in r.stop_tokens
                       and len(r.out) < r.max_new else "max_new")
@@ -471,10 +594,56 @@ class ServeEngine:
         r.out.append(tok)
         self.next_tok[slot, 0] = tok
         self.stats["generated_tokens"] += 1
+        self._notify(r, tok)
         if len(r.out) >= r.max_new or tok in r.stop_tokens:
             self._finish(slot)
             return True
         return False
+
+    def _group_arrays(self, group):
+        """Bucket-padded token/length arrays for one contiguous group."""
+        blen = bucket_len(max(len(r.prompt) for r in group), self.buckets)
+        gp = pad_group(len(group))
+        toks = np.zeros((gp, blen), np.int32)
+        lens = np.ones((gp,), np.int32)          # dummy rows: 1-token prompt
+        for j, r in enumerate(group):
+            toks[j, :len(r.prompt)] = r.prompt
+            lens[j] = len(r.prompt)
+        return toks, lens, blen, gp
+
+    def _install_contig(self, group, blen, gp, logits, new, *,
+                        wave_t0=None, t_admit=0.0):
+        """Sample first tokens and scatter one prefilled group's caches
+        into free slots — the install tail shared verbatim by the blocking
+        wave and the interleaved job, so their tokens match by
+        construction. ``wave_t0`` set = a blocking wave happened (book the
+        prefill_wave span); ``t_admit`` stamps queue-wait's end (the
+        admission decision / prefill start, NOT the wave end)."""
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        rows = list(group) + [None] * (gp - len(group))
+        nxt = self._sample(logits, rows)
+        # dummy rows aim past the pool and are dropped by the scatter
+        idx = np.full((gp,), self.max_batch, np.int32)
+        idx[:len(group)] = free[:len(group)]
+        self.caches = self._insert(self.caches, new, jnp.asarray(idx))
+        self.stats["prefills"] += 1
+        now = 0.0
+        if self.tm is not None:
+            now = self.tm.clock()
+            if wave_t0 is not None:
+                self.tm.prefill_wave(wave_t0, n_reqs=len(group),
+                                     bucket=blen, now=now)
+        for j, r in enumerate(group):
+            slot = int(idx[j])
+            self.slots[slot] = r
+            self.stats["admitted"] += 1
+            self.stats["prefilled_tokens"] += len(r.prompt)
+            if self.tm is not None:
+                self.tm.request_admitted(
+                    r.rid, slot=slot, prefilled_tokens=len(r.prompt),
+                    now=t_admit)
+                self.tm.tokens_emitted(r.rid, 1, now=now)
+            self._append_token(slot, int(nxt[j]))
 
     def _admit(self):
         """Prefill queued requests into free slots (one group per bucket)."""
@@ -483,104 +652,90 @@ class ServeEngine:
             return
         free = [i for i, r in enumerate(self.slots) if r is None]
         while free and self.queue:
-            group = self.sched.select(self.queue, len(free))
+            group = self.sched.select(self.queue, len(free),
+                                      clock=self.step_count)
             if not group:
                 break
             for r in group:
                 self.queue.remove(r)
-            blen = bucket_len(max(len(r.prompt) for r in group), self.buckets)
-            gp = pad_group(len(group))
-            toks = np.zeros((gp, blen), np.int32)
-            lens = np.ones((gp,), np.int32)      # dummy rows: 1-token prompt
-            for j, r in enumerate(group):
-                toks[j, :len(r.prompt)] = r.prompt
-                lens[j] = len(r.prompt)
+            toks, lens, blen, gp = self._group_arrays(group)
             t0 = self.tm.clock() if self.tm is not None else 0.0
             logits, new = self._prefill(self.params, jnp.asarray(toks),
                                         jnp.asarray(lens))
-            rows = list(group) + [None] * (gp - len(group))
-            nxt = self._sample(logits, rows)
-            # dummy rows aim past the pool and are dropped by the scatter
-            idx = np.full((gp,), self.max_batch, np.int32)
-            idx[:len(group)] = free[:len(group)]
-            self.caches = self._insert(self.caches, new, jnp.asarray(idx))
-            self.stats["prefills"] += 1
-            now = 0.0
-            if self.tm is not None:
-                now = self.tm.clock()
-                self.tm.prefill_wave(t0, n_reqs=len(group), bucket=blen,
-                                     now=now)
-            for j, r in enumerate(group):
-                slot = int(idx[j])
-                self.slots[slot] = r
-                self.stats["admitted"] += 1
-                self.stats["prefilled_tokens"] += len(r.prompt)
-                if self.tm is not None:
-                    self.tm.request_admitted(
-                        r.rid, slot=slot, prefilled_tokens=len(r.prompt),
-                        now=now)
-                    self.tm.tokens_emitted(r.rid, 1, now=now)
-                self._append_token(slot, int(nxt[j]))
+            self._install_contig(group, blen, gp, logits, new,
+                                 wave_t0=t0, t_admit=t0)
             free = [i for i, r in enumerate(self.slots) if r is None]
 
     # -- paged admission (radix prefix cache) --------------------------------
 
-    def _admit_paged(self):
+    def _select_paged(self, n_free: int):
+        """Pick one paged admission group and allocate its blocks.
+
+        Returns [(Request, chain, blocks)] with the requests already
+        dequeued (possibly empty on pool exhaustion); matched prefix
+        chains come pinned."""
         bs = self.block_size
+        # longest cached block-prefix per queued request, under the
+        # tree as of *this wave* (earlier waves may have published)
+        chains = {}
+        for r in self.queue:
+            chains[r.rid] = (self.pool.match(r.prompt,
+                                             clock=self.step_count)
+                             if self.prefix_on else [])
+
+        def suffix_len(r):
+            return len(r.prompt) - len(chains[r.rid]) * bs
+
+        group = self.sched.select(self.queue, n_free,
+                                  length_of=suffix_len,
+                                  clock=self.step_count)
+        if not group:
+            return []
+        # pin every candidate's matched chain BEFORE any allocation:
+        # alloc-driven LRU eviction only sees refcount-0 nodes, so a
+        # group member's (or the request's own) matched chain can
+        # never be reclaimed out from under the wave
+        for r in group:
+            self.pool.acquire(chains[r.rid])
+        admitted, deferred = [], list(group)
+        while deferred:
+            r = deferred[0]
+            chain = chains[r.rid]
+            ctx_pages = len(chain)
+            # +spec_k: verify waves write draft-scratch K/V up to
+            # spec_k positions past the last kept token
+            need = (-(-(len(r.prompt) + r.max_new - 1 + self.spec_k)
+                      // bs) - ctx_pages)
+            blocks = self.pool.alloc(need, clock=self.step_count)
+            if blocks is None:
+                break                      # pool exhausted this wave
+            deferred.pop(0)
+            admitted.append((r, chain, blocks))
+        for r in deferred:                 # not admitted: unpin
+            self.pool.release(chains[r.rid])
+        for r, _, _ in admitted:
+            self.queue.remove(r)
+        return admitted
+
+    def _admit_paged(self):
         free = [i for i, r in enumerate(self.slots) if r is None]
         while free and self.queue:
-            # longest cached block-prefix per queued request, under the
-            # tree as of *this wave* (earlier waves may have published)
-            chains = {}
-            for r in self.queue:
-                chains[r.rid] = (self.pool.match(r.prompt,
-                                                 clock=self.step_count)
-                                 if self.prefix_on else [])
-
-            def suffix_len(r):
-                return len(r.prompt) - len(chains[r.rid]) * bs
-
-            group = self.sched.select(self.queue, len(free),
-                                      length_of=suffix_len)
-            if not group:
-                break
-            # pin every candidate's matched chain BEFORE any allocation:
-            # alloc-driven LRU eviction only sees refcount-0 nodes, so a
-            # group member's (or the request's own) matched chain can
-            # never be reclaimed out from under the wave
-            for r in group:
-                self.pool.acquire(chains[r.rid])
-            admitted, deferred = [], list(group)
-            while deferred:
-                r = deferred[0]
-                chain = chains[r.rid]
-                ctx_pages = len(chain)
-                # +spec_k: verify waves write draft-scratch K/V up to
-                # spec_k positions past the last kept token
-                need = (-(-(len(r.prompt) + r.max_new - 1 + self.spec_k)
-                          // bs) - ctx_pages)
-                blocks = self.pool.alloc(need, clock=self.step_count)
-                if blocks is None:
-                    break                      # pool exhausted this wave
-                deferred.pop(0)
-                admitted.append((r, chain, blocks))
-            for r in deferred:                 # not admitted: unpin
-                self.pool.release(chains[r.rid])
+            admitted = self._select_paged(len(free))
             if not admitted:
                 break
-            for r, _, _ in admitted:
-                self.queue.remove(r)
-            self._prefill_admitted(admitted, free)
+            a = self._paged_arrays(admitted)
+            t0 = self.tm.clock() if self.tm is not None else 0.0
+            logits, new = self._paged_prefill_call(a)
+            self._install_paged(admitted, a, logits, new,
+                                wave_t0=t0, t_admit=t0)
             free = [i for i, r in enumerate(self.slots) if r is None]
 
-    def _prefill_admitted(self, admitted, free):
-        """Suffix-prefill one admitted group into its allocated blocks."""
+    def _paged_arrays(self, admitted) -> dict:
+        """Host-side arrays for one paged group's suffix prefill."""
         bs = self.block_size
-        group = [r for r, _, _ in admitted]
-        slots = free[:len(group)]
         blen = bucket_len(max(len(r.prompt) - len(c) * bs
                               for r, c, _ in admitted), self.buckets)
-        gp = pad_group(len(group))
+        gp = pad_group(len(admitted))
         toks = np.zeros((gp, blen), np.int32)
         lens = np.ones((gp,), np.int32)
         plens = np.zeros((gp,), np.int32)
@@ -600,11 +755,8 @@ class ServeEngine:
             # suffix-cache page i lands in the slot's page ctx_pages + i
             n_suffix_pages = self.n_pages - ctx_pages
             dest[j, :n_suffix_pages] = rows[j, ctx_pages:]
-        t0 = self.tm.clock() if self.tm is not None else 0.0
-        if max_ctx_pages == 0:
-            logits, new = self._prefill(self.params, jnp.asarray(toks),
-                                        jnp.asarray(lens))
-        else:
+        ctx_tab = None
+        if max_ctx_pages:
             # pad the gathered context to a power-of-two page bucket so
             # compile variants stay O(buckets), not O(distinct lengths)
             pb = 1
@@ -613,41 +765,66 @@ class ServeEngine:
             ctx_tab = np.zeros((gp, pb), np.int32)
             for j, (_, chain, _) in enumerate(admitted):
                 ctx_tab[j, :len(chain)] = [n.block for n in chain]
-            ctx = self._gather_ctx(self.caches, jnp.asarray(ctx_tab))
-            logits, new = self._prefill_ctx(self.params, jnp.asarray(toks),
-                                            jnp.asarray(lens), ctx,
-                                            jnp.asarray(ctx_lens))
+        return {"toks": toks, "lens": lens, "plens": plens,
+                "ctx_lens": ctx_lens, "rows": rows, "dest": dest,
+                "blen": blen, "gp": gp, "max_ctx_pages": max_ctx_pages,
+                "ctx_tab": ctx_tab}
+
+    def _paged_prefill_call(self, a: dict):
+        """One blocking suffix prefill (plain, or against gathered ctx)."""
+        if a["max_ctx_pages"] == 0:
+            return self._prefill(self.params, jnp.asarray(a["toks"]),
+                                 jnp.asarray(a["lens"]))
+        ctx = self._gather_ctx(self.caches, jnp.asarray(a["ctx_tab"]))
+        return self._prefill_ctx(self.params, jnp.asarray(a["toks"]),
+                                 jnp.asarray(a["lens"]), ctx,
+                                 jnp.asarray(a["ctx_lens"]))
+
+    def _install_paged(self, admitted, a: dict, logits, new, *,
+                       wave_t0=None, t_admit=0.0):
+        """Scatter one prefilled paged group into its blocks + free slots
+        — shared verbatim by the blocking wave and the interleaved job
+        (token parity by construction). ``wave_t0`` set = blocking wave
+        (book the prefill_wave span); ``t_admit`` stamps queue-wait's end
+        (the admission decision / prefill start, NOT the wave end)."""
+        bs = self.block_size
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        group = [r for r, _, _ in admitted]
+        slots = free[:len(group)]
+        gp = a["gp"]
         row_reqs = list(group) + [None] * (gp - len(group))
         nxt = self._sample(logits, row_reqs)
         self.caches = self._insert_pages(self.caches, new,
-                                         jnp.asarray(dest))
+                                         jnp.asarray(a["dest"]))
         # padded to the group's power-of-two size like every other
         # admission op (one compile per log group size, not per size);
         # dummy rows aim past the pool and drop
         slot_idx = np.full((gp,), self.max_batch, np.int32)
         slot_idx[:len(group)] = slots
-        self.caches = self._update_slots(self.caches, jnp.asarray(rows),
-                                         jnp.asarray(plens),
+        self.caches = self._update_slots(self.caches,
+                                         jnp.asarray(a["rows"]),
+                                         jnp.asarray(a["plens"]),
                                          jnp.asarray(slot_idx))
         self.stats["prefills"] += 1
         now = 0.0
         if self.tm is not None:
             now = self.tm.clock()
-            self.tm.prefill_wave(t0, n_reqs=len(group), bucket=blen,
-                                 now=now)
+            if wave_t0 is not None:
+                self.tm.prefill_wave(wave_t0, n_reqs=len(group),
+                                     bucket=a["blen"], now=now)
         for j, (r, chain, blocks) in enumerate(admitted):
             slot = slots[j]
             self.slots[slot] = r
-            st = _PagedSlot(plen=len(r.prompt), row=rows[j], chain=chain,
-                            private=list(blocks))
+            st = _PagedSlot(plen=len(r.prompt), row=a["rows"][j],
+                            chain=chain, private=list(blocks))
             self._pstate[slot] = st
             self.stats["admitted"] += 1
-            self.stats["prefilled_tokens"] += int(lens[j])
-            self.stats["cached_prompt_tokens"] += int(ctx_lens[j])
+            self.stats["prefilled_tokens"] += int(a["lens"][j])
+            self.stats["cached_prompt_tokens"] += int(a["ctx_lens"][j])
             if self.tm is not None:
                 self.tm.request_admitted(
-                    r.rid, slot=slot, prefilled_tokens=int(lens[j]),
-                    cached_tokens=int(ctx_lens[j]), now=now)
+                    r.rid, slot=slot, prefilled_tokens=int(a["lens"][j]),
+                    cached_tokens=int(a["ctx_lens"][j]), now=t_admit)
                 self.tm.tokens_emitted(r.rid, 1, now=now)
             self.pool.record_hit(chain)
             if self.prefix_on:
@@ -670,6 +847,124 @@ class ServeEngine:
             st.private.remove(int(st.row[pi]))
         st.chain.append(node)
 
+    # -- interleaved prefill (one slice per tick) ---------------------------
+
+    def _job_init(self, gp: int):
+        """Fresh transient (caches, h_last) for a gp-row job; the zeros are
+        built on device by a per-group-size jit (O(log max_batch) compiles,
+        no host->device transfer of a pool-sized buffer)."""
+        fn = self._slice_inits.get(gp)
+        if fn is None:
+            api, pool_len = self.api, self.pool_len
+            fn = self._meshed(jax.jit(
+                lambda: api.prefill_slice_init(gp, pool_len),
+                **({"out_shardings": (self._prefill_sh, self._repl)}
+                   if self.mesh is not None else {})))
+            self._slice_inits[gp] = fn
+        return fn()
+
+    def _start_jobs(self):
+        """Dequeue admissible work into new prefill jobs. Slots are
+        committed (deducted from capacity) here so two jobs never target
+        the same future vacancy, but assigned only at install."""
+        free = sum(1 for r in self.slots if r is None) - self._committed
+        while free > 0 and self.queue:
+            if self.paged:
+                admitted = self._select_paged(free)
+                if not admitted:
+                    break
+                a = self._paged_arrays(admitted)
+                # a cached-prefix group can't slice: its attention reads
+                # gathered context, so it runs as one blocking call —
+                # still scheduled alongside decode like any other job
+                job = _PrefillJob(admitted=admitted, toks=a["toks"],
+                                  lens=a["lens"], blen=a["blen"],
+                                  gp=a["gp"],
+                                  monolithic=a["max_ctx_pages"] > 0,
+                                  arrays=a)
+            else:
+                group = self.sched.select(self.queue, free,
+                                          clock=self.step_count)
+                if not group:
+                    break
+                for r in group:
+                    self.queue.remove(r)
+                toks, lens, blen, gp = self._group_arrays(group)
+                job = _PrefillJob(admitted=[(r, [], []) for r in group],
+                                  toks=toks, lens=lens, blen=blen, gp=gp,
+                                  monolithic=False, arrays=None)
+            reqs = [r for r, _, _ in job.admitted]
+            c = min(self.slice_chunk, job.blen)
+            job.todo = -(-int(job.lens.max()) // c) * c
+            job.rank = min(slo_rank(r.slo) for r in reqs)
+            job.arrival = min(r.arrival for r in reqs)
+            job.t_start = self.tm.clock() if self.tm is not None else 0.0
+            self._jobs.append(job)
+            self._committed += len(reqs)
+            self.stats["prefill_jobs"] += 1
+            free = sum(1 for r in self.slots if r is None) - self._committed
+
+    def _job_key(self, job: _PrefillJob):
+        """Job service order: starved-first, then (SLO rank, arrival)."""
+        limit = getattr(self.sched, "starvation_limit", None)
+        starved = (limit is not None
+                   and self.step_count - job.arrival > limit)
+        return (0 if starved else 1, job.rank, job.arrival)
+
+    def _advance_job(self, job: _PrefillJob) -> bool:
+        """One unit of prefill work; True = job finished and installed."""
+        if job.monolithic:
+            logits, new = self._paged_prefill_call(job.arrays)
+            self._install_paged(job.admitted, job.arrays, logits, new,
+                                wave_t0=None, t_admit=job.t_start)
+            return True
+        t0 = self.tm.clock() if self.tm is not None else 0.0
+        if job.caches is None:
+            job.caches, job.h_last = self._job_init(job.gp)
+        c = min(self.slice_chunk, job.blen)
+        job.h_last, job.caches = self._slice(
+            self.params, job.caches,
+            jnp.asarray(job.toks[:, job.pos:job.pos + c]), job.h_last,
+            jnp.asarray(job.lens), jnp.asarray(job.pos, jnp.int32))
+        job.pos += c
+        self.stats["prefill_slices"] += 1
+        if self.tm is not None:
+            self.tm.prefill_slice(t0, n_reqs=len(job.admitted),
+                                  tokens=c * job.gp, bucket=job.blen)
+        if job.pos < job.todo:
+            return False
+        logits, new = self._slice_finish(self.params, job.caches,
+                                         job.h_last,
+                                         jnp.asarray(job.lens))
+        if self.paged:
+            self._install_paged(job.admitted, job.arrays, logits, new,
+                                wave_t0=None, t_admit=job.t_start)
+        else:
+            self._install_contig([r for r, _, _ in job.admitted],
+                                 job.blen, job.gp, logits, new,
+                                 wave_t0=None, t_admit=job.t_start)
+        return True
+
+    def _prefill_tick(self):
+        """Interleave-mode admission: start jobs for queued work, then run
+        up to ``slices_per_tick`` units of prefill beside this tick's
+        decode batch. With no slot decoding there is nothing to starve, so
+        the backlog drains freely until an install re-arms the decode
+        loop."""
+        self._start_jobs()
+        idle = all(r is None for r in self.slots)
+        n = self.slices_per_tick
+        while self._jobs and (n > 0 or idle):
+            job = min(self._jobs, key=self._job_key)
+            n -= 1
+            if self._advance_job(job):
+                self._jobs.remove(job)
+                self._committed -= len(job.admitted)
+                # an install can finish instantly (max_new=1) and re-free
+                # its slots — let newly-admissible work start now
+                self._start_jobs()
+                idle = all(r is None for r in self.slots)
+
     # -- engine ticks -------------------------------------------------------
 
     def step(self) -> bool:
@@ -678,9 +973,18 @@ class ServeEngine:
         False once no slot is occupied (idle)."""
         if self.spec_k:
             return self._step_spec()
-        self._admit()
+        if self.interleave:
+            self._prefill_tick()
+        else:
+            self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
+            if self._jobs:
+                # prefill still in flight (this tick did slice work, or an
+                # install finished instantly): keep the clock moving and
+                # report busy so callers keep ticking
+                self.step_count += 1
+                return True
             return False
         t0 = self.tm.clock() if self.tm is not None else 0.0
         logits, self.caches = self._decode(self.params, self.caches,
@@ -720,9 +1024,15 @@ class ServeEngine:
         an all-accepted history, using the request's own (rid, step)
         stream — the draft only decides how many of those emissions one
         wave can bank (1..spec_k+1 per slot)."""
-        self._admit()
+        if self.interleave:
+            self._prefill_tick()
+        else:
+            self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
+            if self._jobs:
+                self.step_count += 1
+                return True
             return False
         k = self.spec_k
         # pre-wave cache length per slot (invariant: plen + len(out) - 1;
@@ -816,6 +1126,8 @@ class ServeEngine:
              "serve_queue_depth": len(self.queue),
              "serve_slot_occupancy": occ / self.max_batch
              if self.max_batch else 0.0}
+        if self.interleave:
+            g["serve_prefill_jobs"] = len(self._jobs)
         if self.paged:
             free = len(self.pool.free)
             g["kv_blocks_free"] = free

@@ -1,6 +1,6 @@
 """Scheduling primitives for the continuous-batching slot engine.
 
-Three pieces, kept separate from the engine's JAX plumbing so the policy is
+Pieces kept separate from the engine's JAX plumbing so the policy is
 testable in pure Python:
 
   * length buckets — queued prompts are padded up to a small set of bucket
@@ -9,6 +9,15 @@ testable in pure Python:
   * ``FifoScheduler`` — the admission policy: serve the oldest queued request
     first, and batch it with every other queued request that shares its
     length bucket, up to the number of free slots;
+  * ``SloScheduler`` — SLO-class-aware admission (interactive > standard >
+    batch) with a hard anti-starvation bound: once the oldest queued request
+    has waited ``starvation_limit`` ticks it anchors the next group no
+    matter its class, so no request waits forever behind a stream of
+    higher-priority arrivals;
+  * ``AdmissionError`` — the structured per-request rejection the engine
+    raises at ``add_request`` time (and the HTTP front door maps to a 400),
+    instead of letting an oversized prompt blow up ``bucket_len`` inside
+    the tick loop and take the whole engine down;
   * ``poisson_workload`` — a reproducible mixed-length Poisson arrival
     stream for benchmarks and tests.
 """
@@ -19,10 +28,47 @@ import dataclasses
 
 import numpy as np
 
+# deadline classes, best-first: admission order is (class rank, arrival).
+# The names are the front door's public vocabulary; rank is positional.
+SLO_CLASSES = ("interactive", "standard", "batch")
+
+
+def slo_rank(slo: str) -> int:
+    """Class -> priority rank (lower = served first); raises on unknowns."""
+    try:
+        return SLO_CLASSES.index(slo)
+    except ValueError:
+        raise AdmissionError(
+            "bad_slo", f"unknown SLO class {slo!r}",
+            slo=slo, allowed=list(SLO_CLASSES)) from None
+
+
+class AdmissionError(ValueError):
+    """A request the engine refuses to queue, as structured data.
+
+    Subclasses ValueError so pre-existing ``pytest.raises(ValueError)``
+    call sites keep passing; carries a machine-readable ``code`` and
+    ``detail`` dict so the HTTP front door can answer 400 with a body a
+    client can branch on rather than a stringly-typed message.
+    """
+
+    def __init__(self, code: str, message: str, **detail):
+        super().__init__(message)
+        self.code = code
+        self.detail = {k: v for k, v in detail.items()}
+
+    def to_dict(self) -> dict:
+        return {"error": {"code": self.code, "message": str(self),
+                          "detail": self.detail}}
+
 
 @dataclasses.dataclass
 class Request:
-    """One serving request; slot occupancy lives in the engine's slot table."""
+    """One serving request; slot occupancy lives in the engine's slot table.
+
+    ``rid`` stays the first field: list.remove falls back to dataclass
+    ``__eq__``, and tuple comparison short-circuits on the always-unique
+    rid before ever comparing the prompt arrays."""
     rid: int
     prompt: np.ndarray          # (S,) int32
     max_new: int
@@ -30,6 +76,17 @@ class Request:
     # generation stops after a sampled token lands in this set (the token is
     # kept in out, EOS-style); empty = run to max_new
     stop_tokens: frozenset = frozenset()
+    # deadline class (SLO_CLASSES) — FifoScheduler ignores it
+    slo: str = "standard"
+    # engine tick at which the request was queued (the scheduler's clock
+    # for aging / starvation bounds)
+    arrival: int = 0
+    # per-token observer: called with each generated token id, then None
+    # when the request finishes — the HTTP front door's streaming seam.
+    # Exceptions are swallowed by the engine (a slow client must never
+    # take the tick loop down).
+    stream: object = dataclasses.field(default=None, compare=False,
+                                       repr=False)
 
 
 def make_buckets(max_len: int, *, min_bucket: int = 8) -> tuple[int, ...]:
@@ -88,13 +145,15 @@ class FifoScheduler:
                 "(wrong bucket or no free slot)")
 
     def select(self, queue: list[Request], n_free: int,
-               length_of=None) -> list[Request]:
+               length_of=None, clock: int = 0) -> list[Request]:
         """Pick up to n_free requests sharing the queue head's bucket.
 
         length_of maps a request to the length that gets padded at prefill
         — len(prompt) by default; the prefix-cached engine passes the
         *un-cached suffix* length, so requests whose prompts differ wildly
-        but share a cached header still batch together."""
+        but share a cached header still batch together. ``clock`` (the
+        engine's tick count) is unused here; SLO-aware subclasses age
+        requests against it."""
         if not queue or n_free <= 0:
             return []
         length_of = length_of or (lambda r: len(r.prompt))
@@ -102,11 +161,67 @@ class FifoScheduler:
         group = [r for r in queue
                  if bucket_len(length_of(r), self.buckets) == head_bucket]
         group = group[:n_free]
+        self._note(queue, group)
+        return group
+
+    def _note(self, queue, group):
         if self._selects is not None:
             self._selects.inc()
             if group:
                 self._group_size.observe(len(group))
             self._left_waiting.inc(len(queue) - len(group))
+
+
+class SloScheduler(FifoScheduler):
+    """SLO-class-aware admission with a hard starvation bound.
+
+    Selection anchors on the best (class rank, arrival) request — an
+    ``interactive`` arrival jumps a queue of ``batch`` work — and fills the
+    rest of the group with same-bucket requests in the same priority
+    order. Starvation-freedom is absolute, not probabilistic: whenever the
+    queue head (always the globally oldest request — the engine appends in
+    arrival order) has waited more than ``starvation_limit`` ticks, it
+    anchors the group regardless of class and survives truncation at the
+    front, so the oldest request makes progress at least once per
+    ``starvation_limit``-tick window no matter the arrival pattern.
+
+    With every request in one class this degenerates to FifoScheduler
+    exactly (anchor = queue head, group in queue order), which is what
+    keeps the token-parity matrix valid under the default config.
+    """
+
+    def __init__(self, buckets: tuple[int, ...], metrics=None,
+                 starvation_limit: int = 64):
+        super().__init__(buckets, metrics)
+        if starvation_limit < 1:
+            raise ValueError(
+                f"starvation_limit must be >= 1, got {starvation_limit}")
+        self.starvation_limit = starvation_limit
+        self._starved = None
+        if metrics is not None:
+            self._starved = metrics.counter(
+                "sched_starvation_anchors_total",
+                "admission groups anchored on an over-age request "
+                "(class priority overridden to guarantee progress)")
+
+    def select(self, queue: list[Request], n_free: int,
+               length_of=None, clock: int = 0) -> list[Request]:
+        if not queue or n_free <= 0:
+            return []
+        length_of = length_of or (lambda r: len(r.prompt))
+        if clock - queue[0].arrival > self.starvation_limit:
+            anchor = queue[0]
+            if self._starved is not None:
+                self._starved.inc()
+        else:
+            # min is stable, so arrival ties keep queue (= arrival) order
+            anchor = min(queue, key=lambda r: (slo_rank(r.slo), r.arrival))
+        ab = bucket_len(length_of(anchor), self.buckets)
+        rest = [r for r in queue if r is not anchor
+                and bucket_len(length_of(r), self.buckets) == ab]
+        rest.sort(key=lambda r: (slo_rank(r.slo), r.arrival))
+        group = [anchor] + rest[:n_free - 1]
+        self._note(queue, group)
         return group
 
 

@@ -332,9 +332,15 @@ class Telemetry:
         self.itl = r.histogram(
             "serve_itl_seconds", "inter-token gap after the first token")
         self.queue_wait = r.histogram(
-            "serve_queue_wait_seconds", "arrival to slot admission")
+            "serve_queue_wait_seconds",
+            "arrival to prefill start (the admission decision) — prefill "
+            "time itself is TTFT's, not the queue's")
         self.prefill_s = r.histogram(
             "serve_prefill_wave_seconds", "one admission prefill wave")
+        self.prefill_slice_s = r.histogram(
+            "serve_prefill_slice_seconds",
+            "one interleaved prefill slice (chunked admission work "
+            "co-scheduled with decode ticks)")
         self.decode_s = r.histogram(
             "serve_decode_tick_seconds", "one batched decode tick")
         self.spec_s = r.histogram(
@@ -385,6 +391,12 @@ class Telemetry:
 
     def request_admitted(self, rid: int, *, slot: int, prefilled_tokens: int,
                          cached_tokens: int = 0, now: float | None = None):
+        """``now`` is when this request's prefill STARTED (the admission
+        decision), not when the wave returned — the engine used to stamp
+        the wave's end here, which silently booked the whole prefill into
+        queue-wait on top of TTFT. Attribution after the audit: queue_wait
+        = arrival -> prefill start; TTFT = arrival -> first token (prefill
+        included, counted once)."""
         now = self.clock() if now is None else now
         t0 = self._arrive.get(rid, now)
         self.queue_wait.observe(now - t0)
@@ -399,7 +411,15 @@ class Telemetry:
         """``n`` tokens landed for ``rid`` this tick. The first ever closes
         TTFT; later ones each contribute one ITL gap — a speculative wave
         banking k tokens in one tick contributes k gaps of tick/k, the
-        same convention the hand-rolled bench capture used."""
+        same convention the hand-rolled bench capture used.
+
+        Attribution audit (PR 10): a request's own prefill lands in its
+        TTFT only — but whatever stalls the tick between two of a
+        *decoding* request's tokens (a blocking co-admission wave, an XLA
+        compile, a GC pause) lands in that request's ITL gap, honestly.
+        That is the measurement that exposed the head-of-line bug:
+        interleaved prefill slicing shrinks the per-tick stall to one
+        slice, and these gaps are where the fix shows up."""
         if n <= 0 or rid not in self._arrive:
             return
         now = self.clock() if now is None else now
@@ -438,6 +458,18 @@ class Telemetry:
         self.prefill_s.observe(now - t0)
         self.tracer.span("prefill_wave", t0, now,
                          args={"n_reqs": n_reqs, "bucket": bucket})
+
+    def prefill_slice(self, t0: float, *, n_reqs: int, tokens: int,
+                      bucket: int, now: float | None = None):
+        """One interleaved prefill slice (a chunk of an admission group's
+        prompt run alongside the decode batch). Sliced admissions book
+        these instead of one prefill_wave span — the wave no longer exists
+        as a contiguous blocking interval."""
+        now = self.clock() if now is None else now
+        self.prefill_slice_s.observe(now - t0)
+        self.tracer.span("prefill_slice", t0, now,
+                         args={"n_reqs": n_reqs, "tokens": tokens,
+                               "bucket": bucket})
 
     def decode_tick(self, t0: float, *, n_active: int,
                     now: float | None = None):

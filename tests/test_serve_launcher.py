@@ -1,0 +1,59 @@
+"""Serving launcher telemetry flush: an interrupted or crashed run must
+still leave parseable --metrics-out / --trace-out files behind (the
+flush lives in a finally, not after a drive that may never return).
+"""
+
+import json
+
+import pytest
+
+from repro.launch import serve
+from repro.serving import ServeEngine
+
+
+def _args(tmp_path):
+    m, t = tmp_path / "metrics.json", tmp_path / "trace.json"
+    return m, t, ["--smoke", "--requests", "4", "--max-new", "8",
+                  "--metrics-out", str(m), "--trace-out", str(t)]
+
+
+def _interrupt_after(monkeypatch, n, exc):
+    orig = ServeEngine.step
+    calls = {"n": 0}
+
+    def step(self):
+        calls["n"] += 1
+        if calls["n"] > n:
+            raise exc
+        return orig(self)
+
+    monkeypatch.setattr(ServeEngine, "step", step)
+
+
+def _check_outputs(m, t):
+    metrics = json.loads(m.read_text())
+    assert metrics["counters"]["serve_requests_total"] == 4
+    trace = json.loads(t.read_text())
+    assert trace["traceEvents"], "trace of the partial run is empty"
+
+
+def test_keyboard_interrupt_flushes_telemetry(tmp_path, monkeypatch):
+    m, t, argv = _args(tmp_path)
+    _interrupt_after(monkeypatch, 3, KeyboardInterrupt)
+    serve.main(argv)                       # swallowed: partial run logged
+    _check_outputs(m, t)
+
+
+def test_midrun_crash_still_flushes(tmp_path, monkeypatch):
+    m, t, argv = _args(tmp_path)
+    _interrupt_after(monkeypatch, 3, RuntimeError("device OOM"))
+    with pytest.raises(RuntimeError, match="device OOM"):
+        serve.main(argv)
+    _check_outputs(m, t)
+
+
+def test_clean_run_still_writes(tmp_path):
+    m, t, argv = _args(tmp_path)
+    results = serve.main(argv)
+    assert len(results) == 4
+    _check_outputs(m, t)

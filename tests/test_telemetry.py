@@ -227,6 +227,29 @@ def test_engine_smoke_metrics_and_trace(model):
     assert all(e["dur"] >= 0.0 for e in req_spans)
 
 
+def test_engine_smoke_interleave_slice_metrics(model):
+    """Interleaved prefill books prefill_slice spans (never a blocking
+    prefill_wave) and exports the slice histogram + job gauge — the
+    attribution surface the ITL audit hangs off."""
+    cfg, api, params = model
+    tm = Telemetry()
+    eng = ServeEngine(api, params, max_batch=2, max_len=64,
+                      interleave=True, prefill_chunk=4, telemetry=tm)
+    eng.add_request(np.arange(12) % cfg.vocab, max_new=3)
+    eng.add_request(np.arange(9) % cfg.vocab, max_new=3)
+    eng.run()
+    m = json.loads(tm.metrics_json())
+    assert m["histograms"]["serve_prefill_slice_seconds"]["count"] == \
+        eng.stats["prefill_slices"] > 0
+    assert m["histograms"]["serve_prefill_wave_seconds"]["count"] == 0
+    assert m["gauges"]["serve_prefill_jobs"] == 0.0       # drained
+    evs = tm.chrome_trace()["traceEvents"]
+    eng_spans = {e["name"] for e in evs if e["ph"] == "X"
+                 and e["pid"] == T.ENGINE_PID}
+    assert "prefill_slice" in eng_spans
+    assert "prefill_wave" not in eng_spans
+
+
 def test_engine_smoke_spec_wave_metrics(model):
     cfg, api, params = model
     tm = Telemetry()
@@ -254,10 +277,13 @@ def test_engine_smoke_spec_wave_metrics(model):
 # ---------------------------------------------------------------------------
 
 # every jitted callable the engine may hold; wrapping these counts exactly
-# the device dispatches a tick performs (telemetry must add none)
+# the device dispatches a tick performs (telemetry must add none).
+# _job_init is host code that invokes the per-group-size jitted slice-cache
+# allocator, so wrapping it counts those dispatches too.
 _JITTED = ("_decode", "_prefill", "_insert", "_insert_pages",
            "_update_slots", "_gather_ctx", "_prefill_ctx", "_sample_rows",
-           "_spec_wave", "_set_lens")
+           "_spec_wave", "_set_lens", "_slice", "_slice_finish",
+           "_job_init")
 
 
 def _count_dispatches(eng):
@@ -280,7 +306,8 @@ def _count_dispatches(eng):
     {},                                                  # contiguous
     {"kv_block_size": 8, "prefix_cache": True},          # paged + radix
     {"spec_k": 2},                                       # speculative
-], ids=["contig", "paged_prefix", "spec"])
+    {"interleave": True, "prefill_chunk": 4},            # sliced prefill
+], ids=["contig", "paged_prefix", "spec", "interleave"])
 def test_zero_sync_token_identity_and_dispatch_count(model, kw):
     """The acceptance criterion: with telemetry on, every request's tokens
     are identical to the telemetry-off run AND the engine launches exactly
@@ -313,7 +340,8 @@ def test_zero_sync_token_identity_and_dispatch_count(model, kw):
     {},
     {"kv_block_size": 8, "prefix_cache": True},
     {"spec_k": 2},
-], ids=["contig", "paged_prefix", "spec"])
+    {"interleave": True, "prefill_chunk": 4},
+], ids=["contig", "paged_prefix", "spec", "interleave"])
 def test_stats_schema_exact(model, kw):
     """Every documented stats key exists with the documented type and no
     undocumented key ships — the schema is the contract dashboards and
